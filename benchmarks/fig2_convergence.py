@@ -1,0 +1,45 @@
+"""Paper Figure 2 reproduction: MSD of the network centroid vs iteration for
+non-private / iid-DP / hybrid GFL, at the paper's noise level (sigma=0.2) and
+at an increased level where iid-DP degrades but the hybrid scheme does not.
+
+Paper settings: P=10 servers, K=50 clients, M=2 logistic regression,
+mu=0.1, rho=0.01.
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import jax
+import numpy as np
+
+from repro.core.simulate import run_schemes
+
+OUT = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run(iters: int = 400, repeats: int = 2, quick: bool = False):
+    if quick:
+        iters, repeats = 120, 1
+    rows = []
+    summary = []
+    for sigma in (0.2, 1.0):
+        prob, msd = run_schemes(jax.random.PRNGKey(0), iters=iters,
+                                sigma_g=sigma, P=10, K=50, L=10,
+                                mu=0.1, repeats=repeats, topology="full")
+        for scheme, trace in msd.items():
+            for i, v in enumerate(trace):
+                rows.append((sigma, scheme, i, v))
+            tail = float(np.mean(trace[-max(iters // 10, 5):]))
+            summary.append((f"fig2_msd_tail/sigma={sigma}/{scheme}", tail))
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "fig2_convergence.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["sigma_g", "scheme", "iter", "msd"])
+        w.writerows(rows)
+    return summary
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.6g}")

@@ -1,0 +1,57 @@
+"""Kernel micro-bench: us/call for each Pallas kernel (interpret mode on CPU
+— numbers are correctness-path timings, NOT TPU performance; the TPU story
+is the §Roofline HBM-traffic analysis) and the jnp oracle for comparison.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import combination_matrix
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    P, D, L = 16, 8192 if not quick else 2048, 8
+    A = jnp.asarray(combination_matrix("ring", P), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    psi = jax.random.normal(key, (P, D))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (P, D))
+    upd = jax.random.normal(jax.random.fold_in(key, 2), (L, D))
+    u = jax.random.uniform(jax.random.fold_in(key, 3), (P, D),
+                           minval=-0.499, maxval=0.499)
+    seed = jnp.array([7], jnp.uint32)
+
+    at = A.T
+    rows = [
+        ("kernel/graph_combine_us", _time(ops.graph_combine, A, psi, g)),
+        ("oracle/graph_combine_us",
+         _time(jax.jit(ref.graph_combine_ref), at, psi, g)),
+        ("kernel/secure_agg_us", _time(ops.secure_agg_mean, upd, seed)),
+        ("kernel/laplace_us", _time(lambda x: ops.laplace_transform(x, 0.5),
+                                    u)),
+        ("oracle/laplace_us",
+         _time(jax.jit(lambda x: ref.laplace_transform_ref(x, 0.5)), u)),
+        ("kernel/clip_accum_us", _time(lambda x: ops.clip_accum(x, 1.0),
+                                       upd)),
+        ("oracle/clip_accum_us",
+         _time(jax.jit(lambda x: ref.clip_accum_ref(x, 1.0)), upd)),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.1f}")

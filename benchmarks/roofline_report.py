@@ -1,0 +1,84 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "dryrun_results")
+OUT = os.path.join(HERE, "results")
+
+COLS = ["arch", "shape", "mesh", "combine", "kind", "chips",
+        "compute_s", "memory_s", "collective_s", "bottleneck",
+        "model_flops", "hlo_flops", "useful_flop_frac", "collective_bytes"]
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False):
+    recs = load_records()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "roofline.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(COLS + ["skip"])
+        for r in recs:
+            if "skip" in r:
+                w.writerow([r.get("arch"), r.get("shape"), r.get("mesh"),
+                            r.get("combine"), "", "", "", "", "", "", "", "",
+                            "", "", r["skip"]])
+            else:
+                w.writerow([r.get(c, "") for c in COLS] + [""])
+    base = {}
+    for r in recs:  # dedupe: one baseline per (arch, shape, mesh)
+        if r.get("variant"):
+            continue
+        base.setdefault((r.get("arch"), r.get("shape"), r.get("mesh")), r)
+    base = list(base.values())
+    ok = [r for r in base if "skip" not in r]
+    skips = [r for r in base if "skip" in r]
+    bottl = {}
+    for r in ok:
+        bottl[r["bottleneck"]] = bottl.get(r["bottleneck"], 0) + 1
+    out = [("roofline/num_compiled", len(ok)),
+           ("roofline/num_skipped", len(skips))]
+    out += [(f"roofline/bottleneck_{k}", v) for k, v in sorted(bottl.items())]
+    return out
+
+
+def markdown_table(mesh="16x16", combine=None) -> str:
+    recs = [r for r in load_records()
+            if r.get("mesh", mesh) == mesh
+            and (combine is None or r.get("combine") in (combine, None))]
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "bottleneck | useful_flops | note |",
+             "|---|---|---|---|---|---|---|---|"]
+    seen = set()
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| SKIP: {r['skip']} |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+                f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+                f"**{r['bottleneck']}** | {r['useful_flop_frac']:.3f} | |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val}")
+    print()
+    print(markdown_table())

@@ -1,0 +1,42 @@
+"""Privacy-utility tradeoff: sweep the target epsilon, derive the Theorem-2
+noise schedule, and measure the utility (steady-state MSD) of the hybrid vs
+iid schemes at that noise level.
+
+    PYTHONPATH=src python examples/dp_sweep.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core.privacy.accountant import sigma_for_epsilon
+from repro.core.simulate import generate_problem, run_gfl
+
+ITERS = 150
+MU = 0.1
+B = 10.0
+
+
+def main():
+    prob = generate_problem(jax.random.PRNGKey(0), P=10, K=50)
+    print(f"{'eps target':>10} | {'sigma (Thm 2)':>13} | "
+          f"{'MSD hybrid':>11} | {'MSD iid':>9}")
+    print("-" * 55)
+    for eps in (1000.0, 5000.0, 20000.0):
+        sigma = sigma_for_epsilon(ITERS, MU, B, eps)
+        row = []
+        for scheme in ("hybrid", "iid_dp"):
+            cfg = GFLConfig(num_servers=10, clients_per_server=50,
+                            clients_sampled=10, privacy=scheme,
+                            sigma_g=sigma, mu=MU, topology="full",
+                            grad_bound=B)
+            msd, _ = run_gfl(prob, cfg, iters=ITERS, batch_size=10, seed=2)
+            row.append(float(np.mean(msd[-15:])))
+        print(f"{eps:>10.0f} | {sigma:>13.3f} | {row[0]:>11.5f} | "
+              f"{row[1]:>9.5f}")
+    print("\nhybrid utility is ~flat in sigma (the noise lies in the "
+          "averaging nullspace); iid utility degrades as Theorem 1's "
+          "O(mu + 1/mu) sigma^2 term predicts")
+
+
+if __name__ == "__main__":
+    main()

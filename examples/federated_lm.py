@@ -1,0 +1,93 @@
+"""End-to-end driver: train a (reduced) SmolLM language model with the GFL
+protocol for a few hundred steps on synthetic token streams.
+
+This is the paper's algorithm applied to a real transformer: P servers each
+average L clients' one-step SGD updates (secure-agg masks cancel), then mix
+with graph neighbours under graph-homomorphic Laplace noise.  Loss decreases
+while the privacy accountant tracks eps(i).
+
+    PYTHONPATH=src python examples/federated_lm.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import GFLConfig
+from repro.configs.registry import get_config
+from repro.core import gfl
+from repro.core.privacy.accountant import PrivacyAccountant
+from repro.core.topology import combination_matrix, spectral_gap
+from repro.data import TokenStream, federated_token_batches
+from repro.models import Model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--servers", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--privacy", default="hybrid",
+                    choices=["none", "iid_dp", "hybrid"])
+    ap.add_argument("--sigma", type=float, default=0.01)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m").reduced()
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params0 = model.init(key)
+    flat0, unravel = ravel_pytree(params0)
+    D = flat0.size
+    print(f"model: {cfg.name}  ({D:,} params)   "
+          f"servers={args.servers} clients/round={args.clients}")
+
+    gcfg = GFLConfig(num_servers=args.servers,
+                     clients_per_server=args.clients,
+                     privacy=args.privacy, sigma_g=args.sigma,
+                     mu=0.5, topology="ring", grad_bound=5.0)
+    A = combination_matrix("ring", args.servers)
+    print(f"ring graph spectral gap lambda = {spectral_gap(A):.3f}")
+
+    def grad_fn(w_flat, batch):
+        def loss(w_flat):
+            loss_val, _ = model.loss(unravel(w_flat), batch, remat=False)
+            return loss_val
+        return jax.grad(loss)(w_flat)
+
+    def loss_of(w_flat, batch):
+        return model.loss(unravel(w_flat), batch, remat=False)[0]
+
+    step = gfl.make_gfl_step(A, grad_fn, gcfg)
+    state = gfl.GFLState(jnp.broadcast_to(flat0, (args.servers, D)),
+                         jnp.zeros((), jnp.int32), key)
+
+    stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+    acc = PrivacyAccountant(mu=gcfg.mu, grad_bound=gcfg.grad_bound,
+                            sigma_g=gcfg.sigma_g or 1e-9)
+    eval_batch = federated_token_batches(stream, 99, 0, args.servers, 1, 4,
+                                         args.seq)
+    eval_b = jax.tree.map(lambda x: x[0, 0], eval_batch)
+    eval_loss = jax.jit(loss_of)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = federated_token_batches(stream, 0, i, args.servers,
+                                        args.clients, 2, args.seq)
+        state = step(state, batch)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            wc = gfl.centroid(state.params)
+            lv = float(eval_loss(wc, eval_b))
+            eps = acc.advance(max(args.steps // 10, 1)) \
+                if args.privacy == "hybrid" else float("nan")
+            print(f"step {i:4d}  centroid eval loss {lv:.4f}  "
+                  f"eps(i)={eps:9.1f}  ({time.time()-t0:.0f}s)")
+    print("done: loss should have decreased from ~ln(V) while training "
+          "stayed private at the recorded eps schedule")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's Section-V experiment in ~30 seconds.
+
+Runs graph federated learning (P=10 servers x K=50 clients, logistic
+regression) under three privacy schemes and prints the steady-state MSD —
+reproducing the qualitative Figure-2 result: the hybrid scheme (secure
+aggregation + graph-homomorphic noise) tracks the non-private algorithm,
+while standard iid-DP noise costs utility.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core.privacy.accountant import PrivacyAccountant
+from repro.core.simulate import generate_problem, run_gfl
+
+ITERS = 200
+SIGMA = 0.2
+MU = 0.1
+
+
+def main():
+    print("generating the paper's synthetic logistic problem "
+          "(P=10, K=50, M=2)...")
+    prob = generate_problem(jax.random.PRNGKey(0), P=10, K=50, N=100, M=2)
+    print(f"  global optimum w* = {np.asarray(prob.w_opt).round(3)}")
+
+    for scheme in ("none", "iid_dp", "hybrid"):
+        cfg = GFLConfig(num_servers=10, clients_per_server=50,
+                        clients_sampled=10, privacy=scheme, sigma_g=SIGMA,
+                        mu=MU, topology="full", grad_bound=10.0)
+        msd, _ = run_gfl(prob, cfg, iters=ITERS, batch_size=10, seed=1)
+        tail = float(np.mean(msd[-20:]))
+        print(f"  scheme={scheme:7s}  MSD[0]={msd[0]:.3f}  "
+              f"MSD[final]={tail:.5f}")
+
+    acc = PrivacyAccountant(mu=MU, grad_bound=10.0, sigma_g=SIGMA)
+    acc.advance(ITERS)
+    print(f"privacy ledger after {ITERS} iterations: "
+          f"eps({ITERS}) = {acc.epsilon():.1f} "
+          f"(Theorem 2; privacy decays quadratically with time)")
+    print(f"sigma needed for eps=5 at this horizon: "
+          f"{acc.sigma_schedule(ITERS, 5.0):.2f}")
+
+
+if __name__ == "__main__":
+    main()

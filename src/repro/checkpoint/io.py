@@ -1,0 +1,85 @@
+"""Simple sharded-pytree checkpointing (npz + json manifest, no orbax).
+
+Arrays are host-gathered (fine at example scale; per-shard saving would slot
+in here for the production path) and stored flat keyed by pytree path.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _sanitize(key: str) -> str:
+    return key.replace("/", "·")  # npz entries cannot contain path seps
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    # numpy's npz cannot serialize ml_dtypes (bfloat16 etc.): store the raw
+    # bits as uint16/uint8 and record the true dtype in the manifest.
+    storable = {}
+    for k, v in arrays.items():
+        if v.dtype.kind not in "biufc":  # ml_dtypes (bf16/f8) custom kinds
+            width = {1: np.uint8, 2: np.uint16, 4: np.uint32}[v.dtype.itemsize]
+            storable[_sanitize(k)] = v.view(width)
+        else:
+            storable[_sanitize(k)] = v
+    np.savez(os.path.join(path, "arrays.npz"), **storable)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (shape/dtype validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(manifest["keys"])
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    import ml_dtypes  # jax dependency; provides bfloat16 etc.
+
+    restored = {}
+    for k, leaf in flat_like.items():
+        arr = data[_sanitize(k)]
+        true_dtype = np.dtype(getattr(
+            ml_dtypes, manifest["dtypes"][k], None) or manifest["dtypes"][k]) \
+            if manifest["dtypes"][k] not in (str(arr.dtype),) else arr.dtype
+        if str(arr.dtype) != str(true_dtype):
+            arr = arr.view(true_dtype)   # reinterpret stored raw bits
+        if tuple(arr.shape) != tuple(jnp.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {k}: ckpt {arr.shape} vs {jnp.shape(leaf)}")
+        restored[k] = jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype")
+                                  else arr.dtype)
+    # rebuild tree in `like`'s structure
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    new_leaves = [restored[p] for p in paths]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["step"]

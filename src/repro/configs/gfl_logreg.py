@@ -1,0 +1,21 @@
+"""gfl-logreg: the paper's own Section-V experiment configuration.
+
+P=10 servers x K=50 clients, M=2 logistic regression, mu=0.1, rho=0.01,
+sigma_g=0.2 (Fig. 2)."""
+from repro.configs.base import GFLConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gfl-logreg",
+    family="dense",
+    num_layers=0,
+    d_model=2,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=2,
+    source="Rizk & Sayed 2021, Section V",
+)
+
+GFL = GFLConfig(num_servers=10, clients_per_server=50, privacy="hybrid",
+                sigma_g=0.2, mu=0.1, topology="full", grad_bound=10.0)
+RHO = 0.01

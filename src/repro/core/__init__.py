@@ -1,0 +1,5 @@
+"""Core GFL protocol: topology, privacy, the 3-step algorithm, simulator."""
+from repro.core import gfl, topology
+from repro.core.gfl import GFLState, gfl_round, make_gfl_step, centroid
+
+__all__ = ["gfl", "topology", "GFLState", "gfl_round", "make_gfl_step", "centroid"]

@@ -1,0 +1,22 @@
+from repro.core.privacy.noise import laplace_from_uniform, sample_laplace
+from repro.core.privacy.secure_agg import (
+    pairwise_masks,
+    masked_client_mean,
+)
+from repro.core.privacy.homomorphic import (
+    homomorphic_noise_matrix,
+    homomorphic_combine_noise,
+)
+from repro.core.privacy.accountant import PrivacyAccountant, sensitivity, sigma_for_epsilon
+
+__all__ = [
+    "laplace_from_uniform",
+    "sample_laplace",
+    "pairwise_masks",
+    "masked_client_mean",
+    "homomorphic_noise_matrix",
+    "homomorphic_combine_noise",
+    "PrivacyAccountant",
+    "sensitivity",
+    "sigma_for_epsilon",
+]

@@ -1,0 +1,59 @@
+"""Differential-privacy accounting for the GFL algorithm (Theorem 2).
+
+Sensitivity (eq. 26):  Delta(i) <= 2 mu B i
+Theorem 2:  the hybrid scheme is eps(i)-DP at iteration i when
+
+    sigma_g = sqrt(2) * mu * B * (1 + i) * i / eps(i)
+
+Equivalently, for a fixed sigma_g, privacy decays quadratically:
+
+    eps(i) = sqrt(2) * mu * B * (1 + i) * i / sigma_g = O(i^2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def sensitivity(i: int, mu: float, B: float) -> float:
+    """Delta(i) <= 2 mu B i (eq. 26)."""
+    return 2.0 * mu * B * i
+
+
+def epsilon_at(i: int, mu: float, B: float, sigma_g: float) -> float:
+    """eps(i) for fixed noise std sigma_g (Theorem 2, rearranged)."""
+    if sigma_g <= 0:
+        return float("inf")
+    return (2.0 ** 0.5) * mu * B * (1 + i) * i / sigma_g
+
+
+def sigma_for_epsilon(i: int, mu: float, B: float, eps: float) -> float:
+    """Noise std needed for eps(i)-DP at horizon i (Theorem 2)."""
+    if eps <= 0:
+        raise ValueError("epsilon must be positive")
+    return (2.0 ** 0.5) * mu * B * (1 + i) * i / eps
+
+
+@dataclass
+class PrivacyAccountant:
+    """Tracks the epsilon ledger of a running GFL job."""
+    mu: float
+    grad_bound: float
+    sigma_g: float
+    step: int = 0
+    history: list = field(default_factory=list)
+
+    def advance(self, steps: int = 1) -> float:
+        self.step += steps
+        eps = self.epsilon()
+        self.history.append((self.step, eps))
+        return eps
+
+    def epsilon(self) -> float:
+        return epsilon_at(self.step, self.mu, self.grad_bound, self.sigma_g)
+
+    def sensitivity(self) -> float:
+        return sensitivity(self.step, self.mu, self.grad_bound)
+
+    def sigma_schedule(self, horizon: int, eps_target: float) -> float:
+        """Fixed sigma to guarantee eps_target at `horizon` steps."""
+        return sigma_for_epsilon(horizon, self.mu, self.grad_bound, eps_target)

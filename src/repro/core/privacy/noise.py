@@ -1,0 +1,27 @@
+"""Laplace noise utilities.
+
+The paper's server perturbations are Laplace: ``g_{p,i} ~ Lap(0, sigma_g/sqrt(2))``
+so that the *variance* is ``sigma_g**2`` (Var[Lap(0,b)] = 2 b^2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def laplace_from_uniform(u: jax.Array, scale) -> jax.Array:
+    """Inverse-CDF transform: u in (-1/2, 1/2) -> Lap(0, scale).
+
+    This is the pure-jnp oracle mirrored by the Pallas kernel
+    (:mod:`repro.kernels.laplace`).
+    """
+    u = jnp.asarray(u)
+    return -scale * jnp.sign(u) * jnp.log1p(-2.0 * jnp.abs(u))
+
+
+def sample_laplace(key: jax.Array, shape, sigma, dtype=jnp.float32) -> jax.Array:
+    """Sample Lap(0, sigma/sqrt(2)) i.e. variance sigma**2."""
+    b = sigma / jnp.sqrt(2.0)
+    u = jax.random.uniform(key, shape, dtype=dtype,
+                           minval=-0.5 + 1e-7, maxval=0.5 - 1e-7)
+    return laplace_from_uniform(u, jnp.asarray(b, dtype))

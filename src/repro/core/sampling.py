@@ -1,0 +1,69 @@
+"""Importance sampling of clients (Rizk, Vlaski & Sayed [22], [23]).
+
+The GFL paper's authors' companion work replaces uniform client sampling
+with probabilities proportional to client gradient norms, with unbiased
+1/(L pi_k) reweighting in the aggregate.  We implement the practical
+variant: probabilities from running estimates of per-client gradient norms
+(updated whenever a client participates), floored for exploration.
+
+    pi_k  proportional to  max(||g_k|| estimate, floor)
+    psi_p = w_p - mu * (1/L) sum_{k in L_p} g_k / (K pi_k)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ISState(NamedTuple):
+    norm_est: jax.Array    # [P, K] running gradient-norm estimates
+    counts: jax.Array      # [P, K] participation counts
+
+
+def init_is_state(P: int, K: int) -> ISState:
+    return ISState(jnp.ones((P, K)), jnp.zeros((P, K), jnp.int32))
+
+
+def sampling_probs(state: ISState, floor: float = 0.1) -> jax.Array:
+    """[P, K] client-sampling probabilities (sum to 1 per server)."""
+    est = jnp.maximum(state.norm_est, floor * state.norm_est.mean(
+        axis=1, keepdims=True))
+    return est / est.sum(axis=1, keepdims=True)
+
+
+def sample_clients(key: jax.Array, probs: jax.Array, L: int) -> jax.Array:
+    """[P, L] client indices, sampled WITH replacement per [23] (keeps the
+    importance weights unbiased)."""
+    P, K = probs.shape
+
+    def pick(k, p):
+        return jax.random.choice(k, K, (L,), replace=True, p=p)
+
+    return jax.vmap(pick)(jax.random.split(key, P), probs)
+
+
+def importance_weights(probs: jax.Array, idx: jax.Array) -> jax.Array:
+    """[P, L] unbiased reweighting 1/(K pi_k) for the sampled clients."""
+    K = probs.shape[1]
+    pi = jnp.take_along_axis(probs, idx, axis=1)
+    return 1.0 / (K * jnp.maximum(pi, 1e-9))
+
+
+def update_norm_estimates(state: ISState, idx: jax.Array,
+                          grad_norms: jax.Array, decay: float = 0.7
+                          ) -> ISState:
+    """EMA-update the estimates of the clients that participated.
+
+    idx: [P, L] sampled indices; grad_norms: [P, L] observed norms."""
+    P, L = idx.shape
+
+    def upd(est_row, cnt_row, idx_row, nrm_row):
+        new_est = est_row.at[idx_row].set(
+            decay * est_row[idx_row] + (1 - decay) * nrm_row)
+        new_cnt = cnt_row.at[idx_row].add(1)
+        return new_est, new_cnt
+
+    est, cnt = jax.vmap(upd)(state.norm_est, state.counts, idx, grad_norms)
+    return ISState(est, cnt)

@@ -1,0 +1,12 @@
+from repro.data.synthetic import (
+    TokenStream,
+    federated_token_batches,
+    logistic_client_data,
+    make_batch,
+)
+from repro.data.partition import dirichlet_partition, uniform_partition
+
+__all__ = [
+    "TokenStream", "federated_token_batches", "logistic_client_data",
+    "make_batch", "dirichlet_partition", "uniform_partition",
+]

@@ -1,0 +1,33 @@
+"""Federated data partitioners: split a dataset across (server, client)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def uniform_partition(n: int, P: int, K: int, seed: int = 0):
+    """Random equal split of n indices into P*K client shards -> [P,K,n//(P*K)]."""
+    rng = np.random.default_rng(seed)
+    per = n // (P * K)
+    idx = rng.permutation(n)[: per * P * K]
+    return idx.reshape(P, K, per)
+
+
+def dirichlet_partition(labels: np.ndarray, P: int, K: int,
+                        alpha: float = 0.5, seed: int = 0):
+    """Non-IID label-skew split (Dirichlet over classes per client).
+
+    Returns a list-of-lists of index arrays [P][K]."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    n_clients = P * K
+    client_idx = [[] for _ in range(n_clients)]
+    for c in classes:
+        c_idx = np.nonzero(labels == c)[0]
+        rng.shuffle(c_idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(c_idx)).astype(int)[:-1]
+        for cl, part in enumerate(np.split(c_idx, cuts)):
+            client_idx[cl].extend(part.tolist())
+    out = [[np.asarray(client_idx[p * K + k]) for k in range(K)]
+           for p in range(P)]
+    return out

@@ -1,0 +1,68 @@
+"""Pallas TPU kernels: per-client gradient clipping to bound B + accumulate.
+
+Enforces Assumption 3 (||grad|| <= B, eq. 14) the way DP-SGD does: project
+each client's gradient onto the B-ball, then average.  Two-phase grid:
+
+  phase 1  per-client squared norms, accumulated across model-dim tiles
+           (grid revisits the [L] output block; first visit zero-inits);
+  phase 2  scale-and-mean, streaming the gradients a second time with the
+           norms resident in VMEM.
+
+2*L*D reads + D writes total; the naive chain (norms, scale, mean as three
+XLA ops) re-reads the gradient tensor three times.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sumsq_kernel(g_ref, out_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(g * g, axis=1, keepdims=True)
+
+
+def _scale_mean_kernel(g_ref, norms_ref, out_ref, *, bound: float, L: int):
+    g = g_ref[...].astype(jnp.float32)                     # [L, bd]
+    nrm = jnp.sqrt(norms_ref[...])                         # [L, 1]
+    coef = jnp.minimum(1.0, bound / jnp.maximum(nrm, 1e-12))
+    out_ref[...] = (jnp.sum(g * coef, axis=0, keepdims=True) / L
+                    ).astype(out_ref.dtype)
+
+
+def clip_accum(grads: jax.Array, bound: float, *, block_d: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """grads: [L, D] per-client gradients -> clipped mean [D]."""
+    L, D = grads.shape
+    assert D % block_d == 0, (D, block_d)
+    grid = (D // block_d,)
+    norms = pl.pallas_call(
+        _sumsq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((L, block_d), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((L, 1), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, 1), jnp.float32),
+        interpret=interpret,
+    )(grads)
+    kern = functools.partial(_scale_mean_kernel, bound=float(bound), L=L)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, block_d), lambda j: (0, j)),
+            pl.BlockSpec((L, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, D), grads.dtype),
+        interpret=interpret,
+    )(grads, norms)
+    return out[0]

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused graph-homomorphic server combination (eq. 8 + 24).
+
+Computes, for every server p and model-dim block:
+
+    out[p, :] = sum_m A[m, p] * (psi[m, :] + g_hom[m, p, :])
+              = (A^T (psi + g))[p, :] - g[p, :]
+
+using the eq.-(24) identity so the [P, P, D] noise tensor is never
+materialized: only the per-server Laplace draws ``g`` [P, D] stream through
+VMEM alongside ``psi``, and the P x P mixing runs on the MXU per block.
+
+HBM traffic: 2*P*D reads + P*D writes (vs 3x that for the unfused
+psi-gather -> noise-add -> matmul chain), which matters because this pass
+streams the ENTIRE parameter space every GFL iteration.
+
+Grid: one program per model-dim tile of size ``block_d``.  P is padded to
+the 8-sublane boundary outside the kernel (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(a_t_ref, psi_ref, g_ref, out_ref):
+    """a_t: [P, P] (=A^T), psi/g/out blocks: [P, block_d]."""
+    a_t = a_t_ref[...]
+    psi = psi_ref[...]
+    g = g_ref[...]
+    mixed = jnp.dot(a_t, (psi + g).astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    out_ref[...] = (mixed - g.astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def graph_combine(a_t: jax.Array, psi: jax.Array, g: jax.Array,
+                  *, block_d: int = 512, interpret: bool = False
+                  ) -> jax.Array:
+    """psi, g: [P, D]; a_t: [P, P] (transposed combination matrix)."""
+    P, D = psi.shape
+    assert D % block_d == 0, (D, block_d)
+    grid = (D // block_d,)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((P, P), lambda j: (0, 0)),       # A^T resident
+            pl.BlockSpec((P, block_d), lambda j: (0, j)),
+            pl.BlockSpec((P, block_d), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((P, block_d), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((P, D), psi.dtype),
+        interpret=interpret,
+    )(a_t, psi, g)

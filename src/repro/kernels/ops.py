@@ -1,0 +1,121 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to TPU tile boundaries ((8, 128) for f32) and fall back to
+interpret mode automatically on CPU so the same call sites work in tests,
+the simulator, and on real TPUs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import clip_accum as _clip
+from repro.kernels import graph_combine as _combine
+from repro.kernels import laplace as _laplace
+from repro.kernels import secure_agg as _sagg
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_last(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, d
+
+
+def _pad_first(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, n
+
+
+def _block_for(d: int, want: int = 512) -> int:
+    b = min(want, d)
+    while d % b:
+        b //= 2
+    return max(b, 1)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def graph_combine(A: jax.Array, psi: jax.Array, g: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused server combination: [P,D], [P,D] -> [P,D]."""
+    interpret = _on_cpu() if interpret is None else interpret
+    a_t = jnp.asarray(A).T
+    psi_p, D = _pad_last(psi, 128)
+    g_p, _ = _pad_last(g, 128)
+    psi_p, P = _pad_first(psi_p, 8)
+    g_p, _ = _pad_first(g_p, 8)
+    a_pad = jnp.zeros((psi_p.shape[0], psi_p.shape[0]), a_t.dtype)
+    a_pad = a_pad.at[:P, :P].set(a_t)
+    # padded servers get g=0 rows already; diag term subtracts their own g=0
+    out = _combine.graph_combine(a_pad, psi_p, g_p,
+                                 block_d=_block_for(psi_p.shape[1]),
+                                 interpret=interpret)
+    return out[:P, :D]
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def secure_agg_mean(updates: jax.Array, seed: jax.Array, scale: float = 1.0,
+                    interpret: bool | None = None) -> jax.Array:
+    """Masked client mean: [L,D] -> [D]."""
+    interpret = _on_cpu() if interpret is None else interpret
+    upd, D = _pad_last(updates, 128)
+    out = _sagg.secure_agg_mean(upd, jnp.atleast_1d(seed).astype(jnp.uint32),
+                                scale=scale,
+                                block_d=_block_for(upd.shape[1]),
+                                interpret=interpret)
+    return out[:D]
+
+
+@partial(jax.jit, static_argnames=("sigma", "interpret"))
+def laplace_transform(u: jax.Array, sigma: float,
+                      interpret: bool | None = None) -> jax.Array:
+    """Uniform (-1/2,1/2) -> Lap(0, sigma/sqrt 2): [P,D] -> [P,D]."""
+    interpret = _on_cpu() if interpret is None else interpret
+    up, D = _pad_last(u, 128)
+    up, P = _pad_first(up, 8)
+    out = _laplace.laplace_transform(up, sigma,
+                                     block_d=_block_for(up.shape[1]),
+                                     interpret=interpret)
+    return out[:P, :D]
+
+
+@partial(jax.jit, static_argnames=("bound", "interpret"))
+def clip_accum(grads: jax.Array, bound: float,
+               interpret: bool | None = None) -> jax.Array:
+    """Per-client clip to B + mean: [L,D] -> [D]."""
+    interpret = _on_cpu() if interpret is None else interpret
+    g, D = _pad_last(grads, 128)
+    out = _clip.clip_accum(g, bound, block_d=_block_for(g.shape[1]),
+                           interpret=interpret)
+    return out[:D]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def swa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         nvalid: jax.Array,
+                         interpret: bool | None = None) -> jax.Array:
+    """Flash-style decode attention vs a (ring) KV cache.
+
+    q: [B,H,Dh]; k,v: [B,C,KVH,Dh] (KV heads repeated to H by the caller or
+    here when KVH divides H); nvalid: [1] int32 valid-slot count."""
+    from repro.kernels import swa_decode as _swa
+    interpret = _on_cpu() if interpret is None else interpret
+    B, H, Dh = q.shape
+    kvh = k.shape[2]
+    if kvh != H:
+        rep = H // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return _swa.swa_decode_attention(q, k, v,
+                                     jnp.atleast_1d(nvalid).astype(jnp.int32),
+                                     interpret=interpret)

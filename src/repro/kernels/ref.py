@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-compatible semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.secure_agg import pair_stream
+
+
+def graph_combine_ref(a_t: jax.Array, psi: jax.Array, g: jax.Array
+                      ) -> jax.Array:
+    """out = A^T (psi + g) - g  (eq. 8 with eq. 24 noise structure)."""
+    mixed = (a_t.astype(jnp.float32)
+             @ (psi + g).astype(jnp.float32))
+    return (mixed - g.astype(jnp.float32)).astype(psi.dtype)
+
+
+def secure_agg_mean_ref(updates: jax.Array, seed: jax.Array,
+                        scale: float = 1.0) -> jax.Array:
+    """Masked client mean with the same integer-hash pairwise streams."""
+    L, D = updates.shape
+    acc = jnp.sum(updates.astype(jnp.float32), axis=0)
+    idx = jnp.arange(D, dtype=jnp.uint32)
+    pid = 0
+    for a in range(L):
+        for b in range(a + 1, L):
+            s = pair_stream(jnp.uint32(pid), idx, seed[0], scale)
+            acc = acc + s - s
+            pid += 1
+    return (acc / L).astype(updates.dtype)
+
+
+def laplace_transform_ref(u: jax.Array, sigma: float) -> jax.Array:
+    b = sigma / (2.0 ** 0.5)
+    uf = u.astype(jnp.float32)
+    return (-b * jnp.sign(uf) * jnp.log1p(-2.0 * jnp.abs(uf))).astype(u.dtype)
+
+
+def clip_accum_ref(grads: jax.Array, bound: float) -> jax.Array:
+    g = grads.astype(jnp.float32)
+    nrm = jnp.linalg.norm(g, axis=1, keepdims=True)
+    coef = jnp.minimum(1.0, bound / jnp.maximum(nrm, 1e-12))
+    return jnp.mean(g * coef, axis=0).astype(grads.dtype)
+
+
+def swa_decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                             nvalid: jax.Array) -> jax.Array:
+    """Naive masked decode attention. q: [B,H,Dh]; k,v: [B,C,H,Dh]."""
+    Dh = q.shape[-1]
+    C = k.shape[1]
+    s = jnp.einsum("bhd,bchd->bhc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (Dh ** 0.5)
+    s = jnp.where(jnp.arange(C)[None, None, :] < nvalid[0], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhc,bchd->bhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

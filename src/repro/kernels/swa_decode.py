@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: single-token decode attention over a (ring) KV cache.
+
+The decode hot path at 32k-500k context: one query per sequence against C
+cached slots, with slot-validity masking (ring buffers expose min(pos+1, C)
+valid slots).  Flash-style online softmax: the cache is streamed through
+VMEM in `block_c` tiles; running (max, denom, weighted-V) state lives in the
+output refs, which every grid step revisits — the [C] score vector never
+exists in HBM.
+
+Layout: q [B, H, Dh]; k/v [B, C, H, Dh] (GQA grouping resolved by the
+wrapper via repeat of KV heads, keeping the kernel MXU-shaped).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _swa_decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref,
+                       *, block_c: int, scale: float):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # [B, H, Dh]
+    k = k_ref[...].astype(jnp.float32)            # [B, bc, H, Dh]
+    v = v_ref[...].astype(jnp.float32)
+    nvalid = valid_ref[0]                         # scalar int32
+
+    s = jnp.einsum("bhd,bchd->bhc", q, k) * scale  # [B, H, bc]
+    slot = j * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, dimension=2)
+    s = jnp.where(slot < nvalid, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # [B, H]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=2))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])             # [B, H, bc]
+    l_new = l_prev * alpha + p.sum(axis=2)
+    o_prev = o_ref[...].astype(jnp.float32)
+    o_new = o_prev * alpha[..., None] + jnp.einsum("bhc,bchd->bhd", p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    o_ref[...] = o_new.astype(o_ref.dtype)
+
+
+def swa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         nvalid: jax.Array, *, block_c: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """q: [B,H,Dh]; k,v: [B,C,H,Dh]; nvalid: [1] int32 -> out [B,H,Dh]."""
+    B, H, Dh = q.shape
+    C = k.shape[1]
+    block_c = min(block_c, C)
+    while C % block_c:
+        block_c //= 2
+    scale = 1.0 / (Dh ** 0.5)
+    kern = functools.partial(_swa_decode_kernel, block_c=block_c, scale=scale)
+    o, m, l = pl.pallas_call(
+        kern,
+        grid=(C // block_c,),
+        in_specs=[
+            pl.BlockSpec((B, H, Dh), lambda j: (0, 0, 0)),
+            pl.BlockSpec((B, block_c, H, Dh), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((B, block_c, H, Dh), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, H, Dh), lambda j: (0, 0, 0)),
+            pl.BlockSpec((B, H), lambda j: (0, 0)),
+            pl.BlockSpec((B, H), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, nvalid)
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

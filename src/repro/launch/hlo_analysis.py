@@ -1,0 +1,314 @@
+"""Static analyzer for optimized HLO text: loop-scaled FLOPs / HBM bytes /
+collective bytes.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which makes
+scan-over-layers programs look ~L times cheaper than they are.  This module
+re-derives the three roofline inputs from the HLO text itself:
+
+  * the module is split into computations;
+  * a call graph (fusion `calls=`, while `body=`/`condition=`, conditional
+    `branch_computations=`) is walked from ENTRY, multiplying by each while's
+    ``known_trip_count`` — so a 30-layer scan body counts 30x;
+  * FLOPs: `dot` ops contribute 2 * |output| * |contraction| (operand shapes
+    resolved through the computation's symbol table); elementwise arithmetic
+    contributes |output|;
+  * HBM bytes: the sum of operand+output sizes of *materializing* top-level
+    ops in executed (non-fusion) computations — fusion boundaries are where
+    XLA reads/writes HBM;
+  * collective bytes: output sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops, loop-scaled.
+
+All quantities are per-device: the input is the SPMD-partitioned module.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9]+m[0-9]+\w*)?)\[([\d,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "compare", "select", "and", "or", "xor", "not",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "power", "sine", "cosine",
+    "clamp", "remainder", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "atan2", "erf",
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+_NON_MATERIALIZING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def shape_info(type_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) over all array literals in a type str."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_type: str
+    operands: list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict = field(default_factory=dict)   # param name -> type str
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)  # op name -> type str
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:[a-z]+[0-9]*[^\s]*\[[\d,]*\][^\s]*|\(.*?\)))\s+"
+    r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(raw)
+            if m and raw.rstrip().endswith("{"):
+                is_entry, name, params = m.groups()
+                cur = Computation(name)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+                for pm in re.finditer(r"%?([\w.\-]+):\s*"
+                                      r"(\([^)]*\)|[a-z]+[0-9]*\[[\d,]*\][^,)]*)",
+                                      params):
+                    cur.params[pm.group(1)] = pm.group(2)
+                    cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        om = _OP_RE.match(raw)
+        if om:
+            nm, out_type, opcode = om.groups()
+            # operands: names inside the first (...) after the opcode
+            rest = raw[om.end():]
+            depth = 1
+            args = []
+            buf = ""
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                buf += ch
+            operands = _OPERAND_RE.findall(buf)
+            op = Op(nm, opcode, out_type, operands, raw)
+            cur.ops.append(op)
+            cur.symbols[nm] = out_type
+    return comps, entry
+
+
+def _call_edges(op: Op) -> list[tuple[str, float]]:
+    """(callee computation, scale) pairs induced by this op."""
+    edges = []
+    line = op.line
+    if op.opcode == "while":
+        trip = 1
+        tm = re.search(r'known_trip_count[="\{:]+n["\':]+(\d+)', line)
+        if tm:
+            trip = int(tm.group(1))
+        bm = re.search(r"body=%?([\w.\-]+)", line)
+        cm = re.search(r"condition=%?([\w.\-]+)", line)
+        if bm:
+            edges.append((bm.group(1), float(trip)))
+        if cm:
+            edges.append((cm.group(1), float(trip + 1)))
+    elif op.opcode == "fusion":
+        fm = re.search(r"calls=%?([\w.\-]+)", line)
+        if fm:
+            edges.append((fm.group(1), 1.0))
+    elif op.opcode == "conditional":
+        for bm in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+            for name in _OPERAND_RE.findall(bm.group(1)):
+                edges.append((name, 1.0))
+        tm = re.search(r"true_computation=%?([\w.\-]+)", line)
+        fm = re.search(r"false_computation=%?([\w.\-]+)", line)
+        if tm:
+            edges.append((tm.group(1), 1.0))
+        if fm:
+            edges.append((fm.group(1), 1.0))
+    # to_apply (reduce/scatter/sort comparators) intentionally not traversed
+    return edges
+
+
+def computation_multipliers(comps: dict, entry: str) -> dict[str, float]:
+    mult = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    # fixed point over full recompute passes (call graph is a DAG; DFS
+    # preorder is not guaranteed topological, so iterate to convergence)
+    changed = True
+    iters = 0
+    while changed and iters < 200:
+        changed = False
+        iters += 1
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        order = _topo_order(comps, entry)
+        for name in order:
+            m = new.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for op in comps[name].ops:
+                for callee, scale in _call_edges(op):
+                    if callee in new:
+                        new[callee] += m * scale
+        if new != mult:
+            mult = new
+            changed = True
+    return mult
+
+
+def _topo_order(comps: dict, entry: str) -> list[str]:
+    seen = []
+    visited = set()
+
+    def visit(name):
+        if name in visited or name not in comps:
+            return
+        visited.add(name)
+        seen.append(name)
+        for op in comps[name].ops:
+            for callee, _ in _call_edges(op):
+                visit(callee)
+
+    visit(entry)
+    return seen
+
+
+def _fusion_computations(comps: dict) -> set[str]:
+    fused = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if fm:
+                    fused.add(fm.group(1))
+    return fused
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = shape_info(op.out_type)
+    # contraction sizes from lhs shape + lhs_contracting_dims
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not cm or not op.operands:
+        return 2.0 * out_elems  # fallback
+    lhs_type = comp.symbols.get(op.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    contract = 1
+    for ci in cm.group(1).split(","):
+        if ci != "" and int(ci) < len(dims):
+            contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class HLOStats:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = field(default_factory=dict)
+    collective_bytes_by_op: dict = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+
+def analyze_hlo(text: str) -> HLOStats:
+    comps, entry = parse_module(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult = computation_multipliers(comps, entry)
+    fused = _fusion_computations(comps)
+    stats = HLOStats()
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = name in fused
+        for op in comp.ops:
+            out_elems, out_bytes = shape_info(op.out_type)
+            # ---- flops
+            if op.opcode == "dot":
+                f = _dot_flops(op, comp) * m
+                stats.flops += f
+                stats.dot_flops += f
+            elif op.opcode in _ELEMENTWISE:
+                stats.flops += out_elems * m
+            elif op.opcode in ("reduce", "reduce-window"):
+                # approx: one op per input element
+                in_elems = sum(shape_info(comp.symbols.get(o, ""))[0]
+                               for o in op.operands[:1])
+                stats.flops += max(in_elems, out_elems) * m
+            elif op.opcode == "convolution":
+                # fallback: 2 * out * (kernel elems) — rare in this codebase
+                k_elems = shape_info(comp.symbols.get(
+                    op.operands[1], ""))[0] if len(op.operands) > 1 else 1
+                stats.flops += 2.0 * out_elems * max(k_elems, 1) \
+                    / max(out_elems, 1) * out_elems * m
+            # ---- collectives
+            base = op.opcode.removesuffix("-start")
+            if base in {"all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"}:
+                b = out_bytes * m
+                stats.collective_bytes += b
+                stats.collective_counts[base] = \
+                    stats.collective_counts.get(base, 0) + 1
+                stats.collective_bytes_by_op[base] = \
+                    stats.collective_bytes_by_op.get(base, 0.0) + b
+            # ---- hbm bytes at fusion boundaries
+            if not in_fusion and op.opcode not in _NON_MATERIALIZING \
+                    and op.opcode not in ("while", "conditional", "call"):
+                opnd_bytes = sum(shape_info(comp.symbols.get(o, ""))[1]
+                                 for o in op.operands)
+                stats.hbm_bytes += (out_bytes + opnd_bytes) * m
+            if op.opcode == "while" and "known_trip_count" not in op.line:
+                stats.unknown_trip_loops += 1
+    return stats

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.  The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing
+jax; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU integration tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def server_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the GFL server dimension."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def num_servers(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in server_axes(mesh)]))

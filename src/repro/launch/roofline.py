@@ -1,0 +1,193 @@
+"""Roofline analysis from AOT-compiled artifacts (no hardware execution).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes / (chips * HBM_BW)
+    collective = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (whole-program,
+already accounting for SPMD partitioning: XLA reports per-module costs for
+the partitioned module).  collective_bytes is parsed from the optimized HLO
+text: the sum of operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (x trip count when the
+op sits inside a while loop body executed `trip` times, conservatively
+estimated from scan trip counts is NOT attempted — scans over layers carry
+their collectives in the body ONCE in the text but execute L times, so we
+scale body collectives by the enclosing loop trip count when it is
+statically printed in the loop's backend_config/attributes; otherwise we
+report the unscaled sum and flag it).
+
+Hardware constants: TPU v5e-class chip.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array literals in an HLO type string like
+    '(f32[16,128], u32[2])' or 'bf16[8,1024]{1,0}'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)   # op -> count
+    bytes_by_op: dict = field(default_factory=dict)
+    total_bytes: int = 0
+    in_loop_bytes: int = 0   # collectives inside while bodies (unscaled)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of collective ops in optimized HLO text."""
+    stats = CollectiveStats()
+    in_loop_depth = 0
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        # crude while-body tracking: body computations are separate HLO
+        # computations named e.g. %while_body_xx; collectives inside them
+        # execute trip-count times.  We tag by computation name.
+        if line.startswith(("while_body", "%while_body", "body_")):
+            pass
+        m = re.search(r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)", line)
+        if not m:
+            continue
+        out_shape, op = m.groups()
+        # operand bytes: parse the operand list inside (...) after op name
+        args = line[m.end():]
+        # operand types are not printed inline; use output size as proxy for
+        # permute/all-reduce (same size), all-gather output = P*input -> use
+        # output, reduce-scatter output = input/P -> scale by P unknown; we
+        # use max(output, input-ish) = output size which is the wire size
+        # for gather and an undercount for scatter by definition of operand.
+        b = shape_bytes(out_shape)
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b
+        stats.total_bytes += b
+    return stats
+
+
+def parse_collectives_scaled(hlo_text: str) -> CollectiveStats:
+    """Like parse_collectives but scales collectives that live inside while
+    bodies by the loop trip count when XLA printed it
+    (`known_trip_count={n=K}`) — scan-over-layers makes this matter."""
+    # map computation name -> trip count from call sites
+    trip = {}
+    for m in re.finditer(
+            r"while\(.*?\).*?body=%?([\w.\-]+).*?known_trip_count=\{n=(\d+)\}",
+            hlo_text):
+        trip[m.group(1)] = int(m.group(2))
+    # also reverse attribute order
+    for m in re.finditer(
+            r"known_trip_count=\{n=(\d+)\}.*?body=%?([\w.\-]+)", hlo_text):
+        trip[m.group(2)] = int(m.group(1))
+
+    stats = CollectiveStats()
+    current_comp = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        cm = re.match(r"%?([\w.\-]+)\s*(\([^)]*\))?\s*->.*\{$", line.strip())
+        if line and not line.startswith(" ") and "{" in line:
+            nm = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
+            if nm:
+                current_comp = nm.group(1)
+        m = re.search(r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)", line)
+        if not m:
+            continue
+        out_shape, op = m.groups()
+        b = shape_bytes(out_shape)
+        scale = trip.get(current_comp, 1)
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b * scale
+        stats.total_bytes += b * scale
+        if scale > 1:
+            stats.in_loop_bytes += b * scale
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flop_frac: float = 0.0
+    collective_detail: dict = field(default_factory=dict)
+    memory_per_device: dict = field(default_factory=dict)
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.collective_bytes / (self.chips * LINK_BW)
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_flop_frac = (self.model_flops / self.hlo_flops
+                                 if self.hlo_flops else 0.0)
+        return self
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def model_flops_estimate(n_params: int, n_active_params: int, tokens: int,
+                         kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference forward (per step)."""
+    n = n_active_params or n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Active (per-token) params for MoE archs; == n_params for dense."""
+    if cfg.moe is None:
+        return n_params
+    m = cfg.moe
+    dff = m.expert_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * dff
+    routed_total = m.num_experts * per_expert * (
+        cfg.num_layers - m.first_dense_layers)
+    routed_active = m.top_k * per_expert * (
+        cfg.num_layers - m.first_dense_layers)
+    return n_params - routed_total + routed_active

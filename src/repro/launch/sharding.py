@@ -1,0 +1,182 @@
+"""Sharding rules: pytree-path patterns -> PartitionSpecs.
+
+Parameters follow megatron-style tensor parallelism over the "model" axis:
+column-parallel in-projections, row-parallel out-projections, vocab-parallel
+embeddings, expert-parallel MoE stacks.  In GFL training every leaf gains a
+leading server dim sharded over the data (and pod) axes.  GSPMD handles the
+few non-divisible cases (e.g. whisper's vocab 51865) by internal padding.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# (regex over "/"-joined path, spec builder (model_axis) -> PartitionSpec)
+# First match wins; specs are for the UNstacked (no layer dim) leaf — the
+# layer dim is inserted at position 0 for stacked blocks and the server dim
+# in front of everything for GFL training.
+_RULES: list[tuple[str, callable]] = [
+    # embeddings / head: vocab-parallel
+    (r"embed/table$", lambda m: P(m, None)),
+    (r"lm_head/w$", lambda m: P(None, m)),
+    (r"dec_pos$", lambda m: P(None, None)),
+    # attention (gqa + mla + whisper cross)
+    (r"(attn|xattn)/w_(q|k|v)$", lambda m: P(None, m)),
+    (r"(attn|xattn)/w_o$", lambda m: P(m, None)),
+    (r"attn/w_(dq|dkv|kr)$", lambda m: P(None, None)),
+    (r"attn/w_u(q|k|v)$", lambda m: P(None, m)),
+    (r"attn/(q_norm|kv_norm)$", lambda m: P(None)),
+    # dense mlp
+    (r"(mlp|shared)/w_(gate|up|in)$", lambda m: P(None, m)),
+    (r"(mlp|shared)/w_(down|out)$", lambda m: P(m, None)),
+    (r"(mlp|shared)/b_in$", lambda m: P(m)),
+    (r"(mlp|shared)/b_out$", lambda m: P(None)),
+    # moe: routed experts expert-parallel over "model" when E divides it;
+    # steps.py rewrites to ff-parallel when it does not (mixtral E=8)
+    (r"moe/router$", lambda m: P(None, None)),
+    (r"moe/w_(gate|up)$", lambda m: P(m, None, None)),
+    (r"moe/w_down$", lambda m: P(m, None, None)),
+    # mamba2
+    (r"ssm/w_in$", lambda m: P(None, m)),
+    (r"ssm/w_out$", lambda m: P(m, None)),
+    (r"ssm/(conv_w|conv_b|dt_bias|A_log|D|norm_scale)$", lambda m: P()),
+    # rwkv6
+    (r"att/w_(r|k|v|g)$", lambda m: P(None, m)),
+    (r"att/w_o$", lambda m: P(m, None)),
+    (r"att/(mu_x|mu|maa_w1|maa_w2|w0|decay_w1|decay_w2|u|ln_scale)$",
+     lambda m: P()),
+    (r"ffn/w_k$", lambda m: P(None, m)),
+    (r"ffn/w_v$", lambda m: P(m, None)),
+    (r"ffn/(w_r|mu_k|mu_r)$", lambda m: P()),
+    # norms and anything small: replicate
+    (r".*", lambda m: P()),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_spec(path_str: str, cfg: ModelConfig, *,
+               model_axis: Optional[str] = "model",
+               stacked: bool = False,
+               server_axes: Optional[tuple] = None) -> P:
+    """PartitionSpec for one param leaf. model_axis=None -> replicated."""
+    spec = None
+    for pat, builder in _RULES:
+        if re.search(pat, path_str):
+            spec = builder(model_axis)
+            break
+    parts = list(spec)
+    # moe expert-parallel fallback: shard ff dim when E doesn't divide axis
+    if re.search(r"moe/w_(gate|up|down)$", path_str) and cfg.moe is not None \
+            and model_axis is not None:
+        if cfg.moe.num_experts % 16 != 0:
+            if path_str.endswith("w_down"):
+                parts = [None, model_axis, None]   # [E, F, D]
+            else:
+                parts = [None, None, model_axis]   # [E, D, F]
+    is_stacked = stacked and _leaf_is_stacked(path_str)
+    if is_stacked:
+        parts = [None] + parts                      # layer dim
+    if server_axes:
+        parts = [tuple(server_axes)] + parts        # GFL server dim
+    return P(*parts)
+
+
+def _leaf_is_stacked(path_str: str) -> bool:
+    return bool(re.match(r"(blocks|dense_blocks|enc_blocks)/", path_str))
+
+
+def params_shardings(params, cfg: ModelConfig, mesh, *,
+                     server_axes: Optional[tuple] = None,
+                     model_axis: Optional[str] = "model"):
+    """Pytree of NamedShardings matching `params`.
+
+    model_axis=None replicates every leaf over the model axis (the
+    client-parallel small-model mode)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    specs = []
+    for (path, leaf) in flat[0]:
+        ps = _path_str(path)
+        specs.append(NamedSharding(
+            mesh, param_spec(ps, cfg, stacked=True, server_axes=server_axes,
+                             model_axis=model_axis)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Cache / activation shardings
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, mesh, *, shard_seq: bool = False) -> dict:
+    """PartitionSpecs for the decode cache pytree.
+
+    Default: batch over data(+pod) axes, trailing feature dim over model.
+    shard_seq (long_500k, batch=1): sequence dim over data(+pod) instead.
+    """
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    b, s = (None, da) if shard_seq else (da, None)
+    fam = cfg.family
+    specs: dict = {"pos": P()}
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            specs["c_kv"] = P(None, b, s, "model")
+            specs["k_rope"] = P(None, b, s, None)
+        else:
+            specs["k"] = P(None, b, s, None, "model")
+            specs["v"] = P(None, b, s, None, "model")
+    elif fam == "ssm":
+        specs["wkv"] = P(None, b, "model" if not shard_seq else None,
+                         None, None)
+        specs["att_x"] = P(None, b, None)
+        specs["ffn_x"] = P(None, b, None)
+        if shard_seq:  # batch=1: shard heads over model only
+            specs["wkv"] = P(None, None, "model", None, None)
+            specs["att_x"] = P(None, None, "model")
+            specs["ffn_x"] = P(None, None, "model")
+    elif fam == "hybrid":
+        specs["h"] = P(None, b, "model", None, None)
+        specs["conv"] = P(None, b, None, "model")
+        specs["attn_k"] = P(None, b, s, None, "model")
+        specs["attn_v"] = P(None, b, s, None, "model")
+    elif fam == "audio":
+        specs["k"] = P(None, b, s, None, "model")
+        specs["v"] = P(None, b, s, None, "model")
+        specs["xk"] = P(None, b, None, None, "model")
+        specs["xv"] = P(None, b, None, None, "model")
+    return specs
+
+
+def cache_shardings(cache, cfg: ModelConfig, mesh, *, shard_seq=False):
+    specs = cache_specs(cfg, mesh, shard_seq=shard_seq)
+    return {k: NamedSharding(mesh, specs[k]) for k in cache}
+
+
+def batch_specs(cfg: ModelConfig, mesh, *, kind: str,
+                gfl_train: bool = False,
+                client_parallel: bool = False) -> dict:
+    """PartitionSpecs for input batches."""
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    if gfl_train:
+        # leading dims [P_servers, L, b, ...]; client-parallel mode spreads
+        # the L clients over the idle model axis
+        lead = (da, "model" if client_parallel else None, None)
+    else:
+        lead = (da,)
+    specs = {"tokens": P(*lead, None), "labels": P(*lead, None)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = P(*lead, None, "model")
+    if cfg.family == "audio":
+        specs["frames"] = P(*lead, None, "model")
+    return specs

@@ -1,0 +1,520 @@
+"""Mesh-scale GFL training step and serving steps.
+
+TRAINING (the paper's protocol, eqs. 6-8, at datacenter scale)
+  - every param leaf has a leading server dim P sharded over the data(+pod)
+    mesh axes; within a server, weights are tensor-parallel over "model";
+  - client updates (6): lax.scan over the L client microbatch groups of each
+    server, per-client gradients clipped to the paper's bound B
+    (Assumption 3), accumulated into the server mean;
+  - server aggregation (7): secure-agg pairwise masks cancel EXACTLY in the
+    mean (eq. 23), so the aggregate is computed directly; the mask mechanics
+    are exercised bit-level by the Pallas kernel + simulator paths;
+  - server combination (8): ring-rotation collective over the server axes
+    (see `_rotate_combine`) with graph-homomorphic Laplace noise (eq. 24):
+    the rotating buffer carries (psi_m + g_m) exactly as the wire protocol
+    does, and each server subtracts its own g_p at the end.
+
+  Combine implementations (GFLConfig.combine_impl):
+    dense    einsum over a gathered [P, ...] stack — semantic baseline, only
+             viable for small models;
+    rotate   P-1 ring collective_permutes, O(1) extra memory, works for ANY
+             combination matrix A (weights indexed per rotation step);
+    sparse   neighbour-only permutes for ring/torus graphs — the beyond-paper
+             optimized path (collective bytes ~ degree/P of rotate's).
+
+SERVING: consensus-model prefill / decode, no GFL protocol (params
+replicated over data axes, TP over "model"); decode caches sharded per
+`sharding.cache_specs`.
+
+IID-DP noise at the client level is applied as a single variance-equivalent
+draw (sigma/sqrt(L)) instead of L per-client draws: at 47B params, L
+materialized noise pytrees would not fit HBM, and the MSE analysis only sees
+the mean.  (DESIGN.md §7.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GFLConfig, InputShape, ModelConfig
+from repro.core.topology import combination_matrix
+from repro.launch import sharding as shd
+from repro.launch.mesh import num_servers, server_axes
+from repro.models import Model
+from repro.optim.clip import clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: dict
+    step: jax.Array
+    key: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# noise helpers (pytree Laplace, per-server keys)
+# ---------------------------------------------------------------------------
+
+
+def _tree_laplace(key, tree, sigma):
+    """Laplace(0, sigma/sqrt 2) pytree matching `tree` (one leading server
+    dim already included in the leaves)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        u = jax.random.uniform(k, leaf.shape, jnp.float32,
+                               minval=-0.5 + 1e-7, maxval=0.5 - 1e-7)
+        b = sigma / np.sqrt(2.0)
+        out.append((-b * jnp.sign(u) * jnp.log1p(-2 * jnp.abs(u))
+                    ).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# combine implementations
+# ---------------------------------------------------------------------------
+
+
+def _dense_combine(A, psi, g):
+    """einsum baseline: w_p = sum_m A[m,p] psi_m + (A^T g)_p - g_p."""
+    def mix(x, noise):
+        mixed = jnp.einsum("mp,m...->p...", A.astype(jnp.float32),
+                           (x + noise).astype(jnp.float32))
+        return (mixed - noise.astype(jnp.float32)).astype(x.dtype)
+    if g is None:
+        return jax.tree.map(
+            lambda x: jnp.einsum("mp,m...->p...", A.astype(jnp.float32),
+                                 x.astype(jnp.float32)).astype(x.dtype), psi)
+    return jax.tree.map(mix, psi, g)
+
+
+def _make_shardmap_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
+                           A: np.ndarray, params_like):
+    """shard_map ring-rotation / sparse combine over the server axes.
+
+    Works per-leaf: each device holds its server's model-parallel shard of
+    psi_p (+ its own noise g_p); rotating collective_permutes bring every
+    other server's (psi_m + g_m) past each device, which accumulates
+    a_mp-weighted contributions.  For `sparse` + ring graphs only the two
+    neighbour exchanges run.
+    """
+    saxes = server_axes(mesh)
+    Pn = num_servers(mesh)
+    Aj = jnp.asarray(A, jnp.float32)
+
+    leaf_paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(params_like)[0]
+    ]
+    treedef = jax.tree_util.tree_structure(params_like)
+    model_axis = None if gfl.client_parallel else "model"
+    specs = jax.tree_util.tree_unflatten(treedef, [
+        shd.param_spec(ps, cfg, stacked=True, server_axes=saxes,
+                       model_axis=model_axis)
+        for ps in leaf_paths
+    ])
+
+    def my_server_idx():
+        if len(saxes) == 1:
+            return jax.lax.axis_index(saxes[0])
+        # pod-major flattening: idx = pod * data_size + data
+        return (jax.lax.axis_index(saxes[0]) * mesh.shape[saxes[1]]
+                + jax.lax.axis_index(saxes[1]))
+
+    def ring_perm():
+        return [((i + 1) % Pn, i) for i in range(Pn)]  # recv from right
+
+    def _rotate_combine_leaf(x):
+        """x: local shard with leading server dim of size 1 (this server's
+        psi_p + g_p).  Returns sum_m a_mp (psi_m + g_m) for this p.
+
+        combine_wire="bf16": an optimization_barrier after every permute
+        pins the rotating buffer to the parameter dtype — otherwise XLA
+        hoists the f32 accumulation convert above the whole permute chain
+        and doubles every wire transfer (§Perf hillclimb 1)."""
+        p = my_server_idx()
+        # combine_wire="bf16": accumulate in the param dtype so the leaf fn
+        # contains NO converts for XLA to hoist — the permute chain stays at
+        # 2 bytes/elem on the wire.  (An optimization_barrier variant keeps
+        # f32 accumulation on TPU, but the CPU backend deletes barriers and
+        # upcasts the chain — measured in EXPERIMENTS.md §Perf iter 1.)
+        # combine_wire="f32": f32 accumulation, XLA upcasts the wire.
+        wt = x.dtype if gfl.combine_wire == "bf16" else jnp.float32
+        buf = x
+        acc = (Aj[p, p].astype(wt) * x.astype(wt))
+        for step in range(1, Pn):
+            buf = jax.lax.ppermute(buf, saxes if len(saxes) > 1 else saxes[0],
+                                   ring_perm())
+            src = jnp.mod(p + step, Pn)   # after s left-rotations
+            acc = acc + Aj[src, p].astype(wt) * buf.astype(wt)
+        return acc.astype(x.dtype)
+
+    def combine_fn(noisy_psi):
+        return jax.tree.map(_rotate_combine_leaf, noisy_psi)
+
+    return jax.shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs)
+
+
+def _make_sparse_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
+                         A: np.ndarray, params_like):
+    """Neighbour-only combine for ring (1 server axis) / torus (pod x data).
+
+    Collective bytes per leaf: deg * shard (vs (P-1) * shard for rotate).
+    Requires A to be the Metropolis ring (single axis) or the product graph
+    A_pod (x) A_ring (multi-pod); weights are read off A at trace time.
+    """
+    saxes = server_axes(mesh)
+    Aj = jnp.asarray(A, jnp.float32)
+    Pn = num_servers(mesh)
+
+    leaf_paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(params_like)[0]
+    ]
+    treedef = jax.tree_util.tree_structure(params_like)
+    model_axis = None if gfl.client_parallel else "model"
+    specs = jax.tree_util.tree_unflatten(treedef, [
+        shd.param_spec(ps, cfg, stacked=True, server_axes=saxes,
+                       model_axis=model_axis)
+        for ps in leaf_paths
+    ])
+
+    def _combine_leaf(x):
+        wt = x.dtype if gfl.combine_wire == "bf16" else jnp.float32
+        if len(saxes) == 1:
+            ax = saxes[0]
+            n = mesh.shape[ax]
+            p = jax.lax.axis_index(ax)
+            left = jax.lax.ppermute(
+                x, ax, [((i + 1) % n, i) for i in range(n)])
+            acc = (Aj[p, p].astype(wt) * x.astype(wt)
+                   + Aj[jnp.mod(p + 1, n), p].astype(wt) * left.astype(wt))
+            if n > 2:  # on a 2-ring left == right: don't double-count
+                right = jax.lax.ppermute(
+                    x, ax, [((i - 1) % n, i) for i in range(n)])
+                acc = acc + Aj[jnp.mod(p - 1, n), p].astype(wt) \
+                    * right.astype(wt)
+            return acc.astype(x.dtype)
+        # product graph: mix along data ring, then along pod ring
+        pod_ax, data_ax = saxes
+        nd = mesh.shape[data_ax]
+        npod = mesh.shape[pod_ax]
+        # data-ring Metropolis weights for a ring of size nd
+        from repro.core.topology import combination_matrix as _cm
+        Ad = jnp.asarray(_cm("ring", nd), jnp.float32)
+        Ap = jnp.asarray(_cm("ring", npod) if npod > 2
+                         else np.full((2, 2), 0.5), jnp.float32)
+        pd = jax.lax.axis_index(data_ax)
+        left = jax.lax.ppermute(
+            x, data_ax, [((i + 1) % nd, i) for i in range(nd)])
+        right = jax.lax.ppermute(
+            x, data_ax, [((i - 1) % nd, i) for i in range(nd)])
+        acc = (Ad[pd, pd].astype(wt) * x.astype(wt)
+               + Ad[jnp.mod(pd + 1, nd), pd].astype(wt) * left.astype(wt)
+               + Ad[jnp.mod(pd - 1, nd), pd].astype(wt) * right.astype(wt))
+        acc = acc.astype(x.dtype)
+        pp = jax.lax.axis_index(pod_ax)
+        other = jax.lax.ppermute(
+            acc, pod_ax, [((i + 1) % npod, i) for i in range(npod)])
+        acc = (Ap[pp, pp].astype(wt) * acc.astype(wt)
+               + Ap[jnp.mod(pp + 1, npod), pp].astype(wt)
+               * other.astype(wt))
+        if npod > 2:
+            other2 = jax.lax.ppermute(
+                acc.astype(x.dtype), pod_ax,
+                [((i - 1) % npod, i) for i in range(npod)])
+            acc = acc + Ap[jnp.mod(pp - 1, npod), pp].astype(wt) \
+                * other2.astype(wt)
+        return acc.astype(x.dtype)
+
+    def combine_fn(noisy_psi):
+        return jax.tree.map(_combine_leaf, noisy_psi)
+
+    return jax.shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs)
+
+
+def make_combination_matrix(mesh, gfl: GFLConfig) -> np.ndarray:
+    """A for the mesh's server count; multi-pod uses the product graph
+    A_pod (x) A_data so sparse combine factorizes over the two axes."""
+    saxes = server_axes(mesh)
+    if len(saxes) == 1:
+        return combination_matrix(gfl.topology, mesh.shape[saxes[0]])
+    npod = mesh.shape[saxes[0]]
+    nd = mesh.shape[saxes[1]]
+    Ad = combination_matrix(gfl.topology if gfl.topology != "torus" else "ring",
+                            nd)
+    Ap = np.full((npod, npod), 1.0 / npod) if npod <= 2 \
+        else combination_matrix("ring", npod)
+    return np.kron(Ap, Ad)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, gfl: GFLConfig, mesh,
+                    clients: int = 4,
+                    remat_policy: str | None = None) -> Callable:
+    """Build the jit-able GFL train step.
+
+    params leaves: [P_servers, ...]; batch leaves: [P_servers, L, b, ...].
+    Returns (state, batch) -> (state, metrics).
+    """
+    cfg = model.cfg
+    A = make_combination_matrix(mesh, gfl)
+    Pn = num_servers(mesh)
+    Aj = jnp.asarray(A)
+
+    acc_dtype = jnp.dtype(gfl.grad_acc_dtype)
+
+    def client_mean_grads(w_p, batch_p):
+        """(6)+(7): scan over L clients; per-client clip to B; mean."""
+        def body(acc, client_batch):
+            (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                w_p, client_batch, remat_policy=remat_policy)
+            if gfl.grad_bound > 0:
+                grads, _ = clip_by_global_norm(grads, gfl.grad_bound)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dtype), acc, grads)
+            return acc, loss
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), w_p)
+        acc, losses = jax.lax.scan(body, zeros, batch_p)
+        L = jax.tree_util.tree_leaves(batch_p)[0].shape[0]
+        mean_g = jax.tree.map(lambda a: (a / L).astype(jnp.float32), acc)
+        return mean_g, losses.mean()
+
+    def client_parallel_grads(params, batch):
+        """Small-model mode (§Perf hillclimb 3): ALL (server, client) grads
+        computed concurrently — the L client dim is sharded over the
+        "model" axis (params are replicated over it), turning the idle TP
+        ranks of a too-small model into data parallelism.  Per-client
+        clipping (Assumption 3) is preserved."""
+        saxes_ = server_axes(mesh)
+        da = saxes_ if len(saxes_) > 1 else saxes_[0]
+
+        def one_client(w_p, client_batch):
+            (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                w_p, client_batch, remat_policy=remat_policy)
+            return grads, loss
+
+        grads, losses = jax.vmap(lambda w_p, batch_p: jax.vmap(
+            lambda cb: one_client(w_p, cb))(batch_p))(params, batch)
+        # pin [P, L, ...] grads: P -> data axes, L -> model axis
+        grads = jax.lax.with_sharding_constraint(
+            grads, jax.tree.map(
+                lambda g: NamedSharding(mesh, P(da, "model")), grads))
+        if gfl.grad_bound > 0:
+            # per-(server, client) global-norm clip over the param tree
+            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                             axis=tuple(range(2, g.ndim)))
+                     for g in jax.tree.leaves(grads))          # [P, L]
+            coef = jnp.minimum(1.0, gfl.grad_bound
+                               / jnp.maximum(jnp.sqrt(sq), 1e-12))
+            grads = jax.tree.map(
+                lambda g: (g * coef.reshape(coef.shape + (1,) * (g.ndim - 2))
+                           .astype(g.dtype)), grads)
+        mean_g = jax.tree.map(
+            lambda g: jnp.mean(g.astype(jnp.float32), axis=1), grads)
+        return mean_g, losses.mean(axis=1)
+
+    def step_fn(state: TrainState, batch):
+        key, k_noise, k_client = jax.random.split(state.key, 3)
+
+        # (6)+(7) per server, vmapped over the sharded server dim
+        if gfl.client_parallel:
+            mean_g, loss = client_parallel_grads(state.params, batch)
+        else:
+            mean_g, loss = jax.vmap(client_mean_grads)(state.params, batch)
+        psi = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - gfl.mu * g).astype(w.dtype),
+            state.params, mean_g)
+
+        # (8) with privacy noise
+        if gfl.privacy in ("hybrid", "iid_dp") and gfl.sigma_g > 0:
+            g = _tree_laplace(k_noise, psi, gfl.sigma_g)
+        else:
+            g = None
+
+        if gfl.privacy == "iid_dp":
+            # client-level noise (variance-equivalent single draw) that does
+            # NOT cancel: this is the O(mu^{-1}) term of Theorem 1
+            L = jax.tree_util.tree_leaves(batch)[0].shape[1]
+            cg = _tree_laplace(k_client, psi, gfl.sigma_g / np.sqrt(L))
+            psi = jax.tree.map(lambda x, n: x + n, psi, cg)
+
+        if gfl.combine_impl == "dense":
+            new_params = _dense_combine(Aj, psi, g)
+        else:
+            maker = (_make_sparse_combine if gfl.combine_impl == "sparse"
+                     else _make_shardmap_combine)
+            combine = maker(mesh, cfg, gfl, A, state.params)
+            if g is not None and gfl.privacy == "hybrid":
+                noisy = jax.tree.map(lambda x, n: x + n, psi, g)
+                mixed = combine(noisy)
+                new_params = jax.tree.map(
+                    lambda m, n: (m.astype(jnp.float32)
+                                  - n.astype(jnp.float32)).astype(m.dtype),
+                    mixed, g)
+            elif g is not None:  # iid_dp server noise: mixed noise, no cancel
+                noisy = jax.tree.map(lambda x, n: x + n, psi, g)
+                new_params = combine(noisy)
+            else:
+                new_params = combine(psi)
+
+        metrics = {"loss": loss.mean(), "step": state.step}
+        return TrainState(new_params, state.step + 1, key), metrics
+
+    return step_fn
+
+
+def init_train_state(model: Model, gfl: GFLConfig, mesh, key) -> TrainState:
+    """Per-server replicated init (all servers start from the same point)."""
+    Pn = num_servers(mesh)
+    params = model.init(key)
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (Pn,) + x.shape), params)
+    return TrainState(params, jnp.zeros((), jnp.int32), key)
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs for AOT lowering; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def sanitize_spec(shape: tuple, spec: P, mesh) -> P:
+    """Drop mesh axes from dims they don't divide evenly (e.g. phi3's
+    2047-slot sliding-window ring cache can't be 16-way sequence-sharded).
+    Explicit out_shardings require divisibility; replication is the safe
+    fallback for such (always small) dims."""
+    parts = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            parts.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        parts.append(entry if dim % size == 0 else None)
+    return P(*parts)
+
+
+def train_batch_shape(cfg: ModelConfig, shape: InputShape, n_servers: int,
+                      clients: int = 4):
+    """Leading dims [P, L, b] for the GFL batch."""
+    per_server = shape.global_batch // n_servers
+    L = min(clients, per_server)
+    b = per_server // L
+    return L, b
+
+
+def input_specs(model: Model, shape: InputShape, mesh, *,
+                gfl: GFLConfig | None = None, clients: int = 4) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    cfg = model.cfg
+    S = shape.seq_len
+    saxes = server_axes(mesh)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    if shape.kind == "train":
+        Pn = num_servers(mesh)
+        L, b = train_batch_shape(cfg, shape, Pn, clients)
+        bspecs = shd.batch_specs(
+            cfg, mesh, kind="train", gfl_train=True,
+            client_parallel=bool(gfl and gfl.client_parallel))
+        S_text = S - cfg.num_image_tokens if cfg.family == "vlm" else S
+        batch = {
+            "tokens": _sds((Pn, L, b, S_text), jnp.int32,
+                           ns(bspecs["tokens"])),
+            "labels": _sds((Pn, L, b, S_text), jnp.int32,
+                           ns(bspecs["labels"])),
+        }
+        if cfg.family == "vlm":
+            batch["image_embeds"] = _sds(
+                (Pn, L, b, cfg.num_image_tokens, cfg.d_model),
+                jnp.dtype(cfg.param_dtype), ns(bspecs["image_embeds"]))
+        if cfg.family == "audio":
+            batch["frames"] = _sds(
+                (Pn, L, b, cfg.encoder_seq_len, cfg.d_model),
+                jnp.dtype(cfg.param_dtype), ns(bspecs["frames"]))
+        return batch
+
+    B = shape.global_batch
+    bspecs = shd.batch_specs(cfg, mesh, kind=shape.kind)
+    if shape.kind == "prefill":
+        S_text = S - cfg.num_image_tokens if cfg.family == "vlm" else S
+        batch = {"tokens": _sds((B, S_text), jnp.int32, ns(bspecs["tokens"]))}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = _sds(
+                (B, cfg.num_image_tokens, cfg.d_model),
+                jnp.dtype(cfg.param_dtype), ns(bspecs["image_embeds"]))
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                   jnp.dtype(cfg.param_dtype),
+                                   ns(bspecs["frames"]))
+        return batch
+
+    # decode: tokens [B] + cache of S tokens
+    shard_seq = B == 1
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    cspecs = shd.cache_specs(cfg, mesh, shard_seq=shard_seq)
+    cache = {k: _sds(v.shape, v.dtype,
+                     ns(sanitize_spec(v.shape, cspecs[k], mesh)))
+             for k, v in cache.items()}
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    tok_spec = P(None) if B == 1 else P(da)
+    return {
+        "tokens": _sds((B,), jnp.int32, ns(tok_spec)),
+        "cache": cache,
+    }
+
+
+def params_specs(model: Model, mesh, *, gfl_train: bool,
+                 client_parallel: bool = False) -> tuple:
+    """(ShapeDtypeStruct pytree, NamedSharding pytree) for the params."""
+    cfg = model.cfg
+    saxes = server_axes(mesh) if gfl_train else None
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    if gfl_train:
+        Pn = num_servers(mesh)
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((Pn,) + s.shape, s.dtype), shapes)
+    shardings = shd.params_shardings(
+        shapes, cfg, mesh, server_axes=saxes,
+        model_axis=None if client_parallel else "model")
+    sds = jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+        s.shape, s.dtype, sharding=sh), shapes, shardings)
+    return sds, shardings

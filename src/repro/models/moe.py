@@ -1,0 +1,112 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Dispatch is sort-based (MegaBlocks-style, adapted to static TPU shapes):
+token->expert assignments are stably sorted by expert id, positions within
+each expert group are computed from group offsets, and tokens are
+scatter-gathered into a dense [E, C, D] expert-input buffer.  This keeps the
+routing cost at O(T log T + T D) instead of the O(T C E D) of one-hot einsum
+dispatch (which would *dominate* model FLOPs at 32k sequence length).
+
+The stacked expert weights [E, d, f] are sharded over the "model" mesh axis
+(expert parallelism) when E divides the axis, else the capacity dim of the
+buffer is sharded.  Shared experts (DeepSeek-style) run densely alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import he_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    dff = m.expert_d_ff or cfg.d_ff
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    ke = jax.random.split(k_e, 3)
+    p = {
+        "router": he_init(k_r, (d, m.num_experts), dtype),
+        # stacked expert weights [E, ...] -> expert-parallel shardable
+        "w_gate": he_init(ke[0], (m.num_experts, d, dff), dtype, fan_in=d),
+        "w_up": he_init(ke[1], (m.num_experts, d, dff), dtype, fan_in=d),
+        "w_down": he_init(ke[2], (m.num_experts, dff, d), dtype, fan_in=dff),
+    }
+    if m.num_shared_experts:
+        p["shared"] = swiglu_init(k_s, d, dff * m.num_shared_experts, dtype)
+    return p
+
+
+def capacity(tokens: int, m: MoEConfig) -> int:
+    cap = int(m.capacity_factor * tokens * m.top_k / m.num_experts)
+    cap = max(cap, m.top_k, 4)
+    return (cap + 3) // 4 * 4  # pad to a friendly multiple
+
+
+def moe_forward(params, x, cfg: ModelConfig):
+    """x: [B,S,D] -> (out [B,S,D], aux_loss scalar).
+
+    dispatch="global": one token pool across the whole [B,S] batch — higher
+    quality capacity allocation but the scatter crosses batch shards (XLA
+    inserts an all-reduce of the full expert buffer when B is data-sharded).
+    dispatch="row": independent dispatch per batch row — the scatter stays
+    local to each data shard (§Perf hillclimb 2).
+    """
+    m: MoEConfig = cfg.moe
+    if m.dispatch == "row":
+        outs, auxes = jax.vmap(lambda row: _moe_tokens(
+            params, row, cfg))(x)
+        return outs, auxes.mean()
+    B, S, D = x.shape
+    out, aux = _moe_tokens(params, x.reshape(B * S, D), cfg)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_tokens(params, xf, cfg: ModelConfig):
+    """Core dispatch over a flat token pool. xf: [T,D]."""
+    m: MoEConfig = cfg.moe
+    T, D = xf.shape
+    E = m.num_experts
+    C = capacity(T, m)
+    logits = (xf @ params["router"]).astype(jnp.float32)      # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)       # [T,k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch --------------------------------------------
+    e_flat = gate_idx.reshape(-1)                             # [T*k]
+    w_flat = gate_vals.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(T), m.top_k)
+
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, tok_s, w_s = e_flat[order], tok_flat[order], w_flat[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[e_s].add(1)
+    offsets = jnp.cumsum(counts) - counts                     # group starts
+    pos = jnp.arange(T * m.top_k) - offsets[e_s]              # rank in group
+    keep = pos < C
+    dest = e_s * C + jnp.clip(pos, 0, C - 1)                  # [T*k]
+
+    # expert input buffer [E*C, D] (unique dest among kept entries)
+    upd = jnp.where(keep[:, None], xf[tok_s], 0).astype(xf.dtype)
+    xe = jnp.zeros((E * C, D), xf.dtype).at[dest].add(
+        upd, mode="drop").reshape(E, C, D)
+
+    # ---- expert FFN (E shardable over "model") ---------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).reshape(E * C, D)
+
+    # ---- combine ---------------------------------------------------------
+    gathered = ye[dest] * (w_s * keep)[:, None].astype(xf.dtype)
+    out = jnp.zeros((T, D), xf.dtype).at[tok_s].add(gathered, mode="drop")
+
+    if m.num_shared_experts:
+        out = out + swiglu(params["shared"], xf)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)                                   # [E]
+    frac = counts.astype(jnp.float32) / jnp.maximum(T * m.top_k, 1)
+    aux = m.router_aux_coef * E * jnp.sum(me * frac)
+    return out, aux

@@ -1,0 +1,150 @@
+"""RWKV-6 (Finch) blocks: data-dependent-decay linear attention.
+
+Time mixing implements the wkv6 recurrence with per-channel data-dependent
+decay w_t and bonus u; channel mixing is the squared-ReLU token-shifted FFN.
+Training runs a lax.scan over time (state [B,H,hs,hs] carried); decode is a
+single recurrence step — O(1) state, which is why rwkv6 runs `long_500k`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.models.layers import he_init
+
+
+def rwkv_dims(cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    return cfg.d_model // r.head_size, r.head_size
+
+
+def rwkv6_att_init(key, cfg: ModelConfig, dtype):
+    r: RWKVConfig = cfg.rwkv
+    d = cfg.d_model
+    H, hs = rwkv_dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift mixing coefficients (5 interpolators + base)
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((5, d), 0.5, dtype),          # w,k,v,r,g
+        "maa_w1": he_init(ks[0], (d, 5 * r.mix_lora), dtype),
+        "maa_w2": (jax.random.normal(ks[1], (5, r.mix_lora, d)) * 0.01
+                   ).astype(dtype),
+        # decay lora: w = exp(-exp(w0 + tanh(xw @ d1) @ d2))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_w1": he_init(ks[2], (d, r.decay_lora), dtype),
+        "decay_w2": (jax.random.normal(ks[3], (r.decay_lora, d)) * 0.01
+                     ).astype(dtype),
+        "u": (jax.random.normal(ks[4], (d,)) * 0.1).astype(jnp.float32),
+        "w_r": he_init(ks[5], (d, d), dtype),
+        "w_k": he_init(ks[6], (d, d), dtype),
+        "w_v": he_init(ks[7], (d, d), dtype),
+        "w_g": he_init(ks[8], (d, d), dtype),
+        "w_o": he_init(ks[9], (d, d), dtype),
+        "ln_scale": jnp.ones((d,), dtype),           # per-head group norm
+    }
+
+
+def rwkv6_ffn_init(key, cfg: ModelConfig, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": he_init(ks[0], (d, dff), dtype),
+        "w_v": he_init(ks[1], (dff, d), dtype, fan_in=dff),
+        "w_r": he_init(ks[2], (d, d), dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """Return x_{t-1} sequence; prev is the carry for position 0. x: [B,S,D]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix_inputs(params, x, sx):
+    """Data-dependent token-shift interpolation -> (xw,xk,xv,xr,xg)."""
+    dx = sx - x
+    xxx = x + dx * params["mu_x"]
+    lora = jnp.tanh(xxx @ params["maa_w1"])
+    B_, S, _ = x.shape
+    lora = lora.reshape(B_, S, 5, -1)
+    deltas = jnp.einsum("bsfl,fld->fbsd", lora, params["maa_w2"])
+    mixed = [x + dx * (params["mu"][f] + deltas[f]) for f in range(5)]
+    return mixed  # w,k,v,r,g
+
+
+def _decay(params, xw):
+    lo = jnp.tanh(xw @ params["decay_w1"]) @ params["decay_w2"]
+    return jnp.exp(-jnp.exp(params["w0"] + lo.astype(jnp.float32)))  # in (0,1)
+
+
+def _group_norm(y, scale, H, eps=1e-5):
+    """Per-head layer norm. y: [B,S,H,hs] flattened last two dims on exit."""
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + eps)
+    B_, S = y.shape[:2]
+    out = yf.reshape(B_, S, -1) * scale.astype(jnp.float32)
+    return out
+
+
+def rwkv6_att_forward(params, x, cfg: ModelConfig, state=None, prev_x=None):
+    """Time mixing. x: [B,S,D]. Returns (out, (state, last_x))."""
+    H, hs = rwkv_dims(cfg)
+    B_, S, d = x.shape
+    if prev_x is None:
+        prev_x = jnp.zeros((B_, d), x.dtype)
+    sx = _token_shift(x, prev_x)
+    xw, xk, xv, xr, xg = _mix_inputs(params, x, sx)
+
+    r = (xr @ params["w_r"]).reshape(B_, S, H, hs).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B_, S, H, hs).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B_, S, H, hs).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    w = _decay(params, xw).reshape(B_, S, H, hs)               # [B,S,H,hs]
+    u = params["u"].reshape(H, hs)
+
+    if state is None:
+        state = jnp.zeros((B_, H, hs, hs), jnp.float32)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp                               # [B,H,hs]
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S_ + u[None, :, :, None] * kv)
+        S_ = w_t[:, :, :, None] * S_ + kv
+        return S_, y
+
+    seq = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, seq)
+    y = ys.transpose(1, 0, 2, 3)                               # [B,S,H,hs]
+    y = _group_norm(y, params["ln_scale"], H).astype(x.dtype)
+    out = (y * g) @ params["w_o"]
+    return out, (state, x[:, -1, :])
+
+
+def rwkv6_ffn_forward(params, x, prev_x=None):
+    """Channel mixing. x: [B,S,D]."""
+    B_, S, d = x.shape
+    if prev_x is None:
+        prev_x = jnp.zeros((B_, d), x.dtype)
+    sx = _token_shift(x, prev_x)
+    dx = sx - x
+    xk = x + dx * params["mu_k"]
+    xr = x + dx * params["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    return jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"]), x[:, -1, :]
+
+
+def rwkv6_init_cache(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    H, hs = rwkv_dims(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jnp.zeros((n_layers, batch, H, hs, hs), jnp.float32),
+        "att_x": jnp.zeros((n_layers, batch, d), dtype),
+        "ffn_x": jnp.zeros((n_layers, batch, d), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

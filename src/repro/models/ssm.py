@@ -1,0 +1,205 @@
+"""Mamba2 (SSD) blocks — chunked training path + O(1)-state decode path.
+
+The training/prefill path uses the chunked SSD algorithm (intra-chunk masked
+matmul on the MXU + inter-chunk scan over chunk states), not a length-S scan:
+this is the TPU adaptation of Mamba2's block-decomposition, keeping the MXU
+busy with [Q,Q] and [Q,N] matmuls instead of length-4096 elementwise scans.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import he_init
+
+
+def ssm_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    return d_inner, nheads, s.state_dim, s.ngroups
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, N, G = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": he_init(ks[0], (d, 2 * d_inner + 2 * G * N + H), dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, conv_ch)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "w_out": he_init(ks[2], (d_inner, d), dtype, fan_in=d_inner),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_inner, H, N, G = ssm_dims(cfg)
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + G * N,
+               2 * d_inner + 2 * G * N], axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (yf * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, h_init=None):
+    """Chunked SSD. x: [B,S,D] -> ([B,S,D], state dict {h, conv}).
+
+    The returned state seeds :func:`mamba2_decode` after a prefill."""
+    s: SSMConfig = cfg.ssm
+    d_inner, H, N, G = ssm_dims(cfg)
+    P = s.headdim
+    B_, S, _ = x.shape
+    Q = min(s.chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    z, xc, Bm, Cm, dt = _split_proj(x @ params["w_in"], cfg)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    K = s.conv_dim
+    conv_tail = jnp.pad(conv_in, ((0, 0), (K - 1, 0), (0, 0)))[:, S:, :] \
+        if S < K - 1 else conv_in[:, S - (K - 1):, :]
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"]))
+    xc = conv_out[..., :d_inner].reshape(B_, S, H, P)
+    Bm = conv_out[..., d_inner:d_inner + G * N].reshape(B_, S, G, N)
+    Cm = conv_out[..., d_inner + G * N:].reshape(B_, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                  # [H]
+    loga = dt * A                                                  # log decay
+
+    # reshape into chunks
+    def chunked(t, shape):
+        return t.reshape(B_, nc, Q, *shape)
+
+    xc_c = chunked(xc, (H, P))
+    B_c = chunked(Bm, (G, N))
+    C_c = chunked(Cm, (G, N))
+    dt_c = chunked(dt, (H,))
+    la_c = chunked(loga, (H,))
+
+    # head -> group map
+    rep = H // G
+    B_h = jnp.repeat(B_c, rep, axis=3) if G > 1 else jnp.broadcast_to(
+        B_c, (B_, nc, Q, H, N)) if G == 1 else B_c
+    C_h = jnp.repeat(C_c, rep, axis=3) if G > 1 else jnp.broadcast_to(
+        C_c, (B_, nc, Q, H, N))
+
+    L = jnp.cumsum(la_c, axis=2)                                  # [B,nc,Q,H]
+    Ltot = L[:, :, -1, :]                                         # [B,nc,H]
+
+    # intra-chunk: M[t,s] = exp(L_t - L_s) (C_t . B_s) dt_s  for s<=t
+    CB = jnp.einsum("bcqhn,bcshn->bchqs", C_h.astype(jnp.float32),
+                    B_h.astype(jnp.float32))
+    dL = L[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - L[:, :, None, :, :].transpose(0, 1, 4, 2, 3)            # [B,nc,H,Q(t),Q(s)]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask, jnp.exp(dL) * CB, 0.0)
+    M = M * dt_c.transpose(0, 1, 3, 2)[:, :, :, None, :]          # dt_s
+    Y_intra = jnp.einsum("bchqs,bcshp->bcqhp", M, xc_c.astype(jnp.float32))
+
+    # chunk input-to-state:  H_c = sum_s exp(Ltot - L_s) dt_s x_s (x) B_s
+    w_s = jnp.exp(Ltot[:, :, None, :] - L) * dt_c                 # [B,nc,Q,H]
+    chunk_states = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn",
+                              w_s, xc_c.astype(jnp.float32),
+                              B_h.astype(jnp.float32))
+
+    # inter-chunk scan over chunk states
+    if h_init is None:
+        h_init = jnp.zeros((B_, H, P, N), jnp.float32)
+    decay_tot = jnp.exp(Ltot)                                     # [B,nc,H]
+
+    def scan_fn(h, inp):
+        st, dtot = inp
+        h_out = h                                                 # state BEFORE chunk
+        h = dtot[:, :, None, None] * h + st
+        return h, h_out
+
+    _, h_befores = jax.lax.scan(
+        scan_fn, h_init,
+        (chunk_states.transpose(1, 0, 2, 3, 4),
+         decay_tot.transpose(1, 0, 2)))
+    h_befores = h_befores.transpose(1, 0, 2, 3, 4)                # [B,nc,H,P,N]
+    h_final = decay_tot[:, -1, :, None, None] * h_befores[:, -1] \
+        + chunk_states[:, -1]
+
+    # inter-chunk contribution: y_t += C_t . (exp(L_t) h_before)
+    Y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(L), C_h.astype(jnp.float32), h_befores)
+
+    Y = (Y_intra + Y_inter).reshape(B_, S, H, P)
+    Y = Y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xc.astype(jnp.float32)
+    Y = Y.astype(x.dtype).reshape(B_, S, d_inner)
+    out = _gated_norm(Y, z, params["norm_scale"])
+    return out @ params["w_out"], {"h": h_final, "conv": conv_tail}
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    s: SSMConfig = cfg.ssm
+    d_inner, H, N, G = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "h": jnp.zeros((n_layers, batch, H, s.headdim, N), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, s.conv_dim - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(params, x, h_state, conv_state, cfg: ModelConfig):
+    """Single-token step. x: [B,1,D]; h_state: [B,H,P,N];
+    conv_state: [B,K-1,C]. Returns (out, h_state, conv_state)."""
+    s: SSMConfig = cfg.ssm
+    d_inner, H, N, G = ssm_dims(cfg)
+    P = s.headdim
+    B_ = x.shape[0]
+
+    z, xc, Bm, Cm, dt = _split_proj(x @ params["w_in"], cfg)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)              # [B,1,C]
+    window = jnp.concatenate([conv_state, conv_in], axis=1)      # [B,K,C]
+    conv_out = jax.nn.silu(
+        jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"])
+    new_conv_state = window[:, 1:, :]
+
+    xc = conv_out[..., :d_inner].reshape(B_, H, P)
+    Bm = conv_out[..., d_inner:d_inner + G * N].reshape(B_, G, N)
+    Cm = conv_out[..., d_inner + G * N:].reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # [B,H]
+    decay = jnp.exp(dtv * -jnp.exp(params["A_log"]))              # [B,H]
+
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtv, xc.astype(jnp.float32),
+                     Bh.astype(jnp.float32))
+    h_new = decay[:, :, None, None] * h_state + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h_new)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(B_, 1, d_inner)
+    out = _gated_norm(y, z, params["norm_scale"])
+    return out @ params["w_out"], h_new, new_conv_state

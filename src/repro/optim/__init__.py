@@ -1,0 +1,16 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    momentum,
+    sgd,
+    make_optimizer,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+from repro.optim.clip import clip_by_global_norm, per_leaf_clip
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adam", "adamw", "make_optimizer",
+    "constant", "cosine_decay", "warmup_cosine",
+    "clip_by_global_norm", "per_leaf_clip",
+]

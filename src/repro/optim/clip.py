@@ -1,0 +1,25 @@
+"""Gradient clipping: global-norm (training stability) and per-client
+B-ball projection (Assumption 3 enforcement / DP sensitivity control)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    nrm = global_norm(tree)
+    coef = jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-12))
+    return jax.tree.map(lambda x: (x * coef).astype(x.dtype), tree), nrm
+
+
+def per_leaf_clip(tree, max_norm: float):
+    def clip(x):
+        nrm = jnp.linalg.norm(x.astype(jnp.float32))
+        coef = jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-12))
+        return (x * coef).astype(x.dtype)
+    return jax.tree.map(clip, tree)

@@ -1,0 +1,89 @@
+"""Pure-JAX optimizers (optax-style init/update pairs, pytree-generic).
+
+The GFL path uses plain SGD (the paper's algorithm has no optimizer state,
+and per-server Adam moments at multi-B scale would not fit HBM); Adam/AdamW
+are provided for the small-scale trainers and examples.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step, lr):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step, lr):
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr * (beta * m + g), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step, lr):
+        t = step + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step_ = m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-lr * step_).astype(p.dtype)
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    return adam(b1, b2, eps, weight_decay)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "sgd":
+        return sgd()
+    if cfg.optimizer == "momentum":
+        return momentum(cfg.beta1)
+    if cfg.optimizer == "adam":
+        return adam(cfg.beta1, cfg.beta2)
+    if cfg.optimizer == "adamw":
+        return adamw(cfg.beta1, cfg.beta2, weight_decay=cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (step -> lr, traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        wf = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, lr * wf, cos(step - warmup))
+    return fn

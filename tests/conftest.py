@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device.  The 512-device production mesh
+# is exercised ONLY via subprocess tests (test_dryrun.py) so jax here sees
+# the true device count.  Keep threads tame on the 1-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

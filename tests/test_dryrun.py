@@ -1,0 +1,180 @@
+"""Mini-mesh integration tests for the launch layer.
+
+These spawn SUBPROCESSES with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+so the main pytest process keeps the true (1) device count, per the
+dry-run isolation requirement.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_mesh_gfl_train_step_runs():
+    """2 GFL steps on a 2x4 mini-mesh with real data; finite loss; sparse
+    combine preserves the centroid identity vs dense combine."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import GFLConfig
+        from repro.configs.registry import get_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch import steps as S
+        from repro.models import Model
+        from repro.data import TokenStream, federated_token_batches
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        cfg = get_config("smollm-135m").reduced()
+        model = Model(cfg)
+        stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+
+        results = {}
+        for impl in ("sparse", "rotate", "dense"):
+            gfl = GFLConfig(topology="ring", privacy="hybrid", sigma_g=0.1,
+                            grad_bound=10.0, mu=0.05, combine_impl=impl)
+            with mesh:
+                step = jax.jit(S.make_train_step(model, gfl, mesh))
+                state = S.init_train_state(model, gfl, mesh,
+                                           jax.random.PRNGKey(0))
+                batch = federated_token_batches(stream, 0, 0, P=2, L=2,
+                                                per_client=2, seq_len=32)
+                state, m = step(state, batch)
+                state, m = step(state, batch)
+            loss = float(m["loss"])
+            assert np.isfinite(loss), impl
+            cent = np.mean(np.asarray(
+                jax.device_get(state.params["embed"]["table"]),
+                np.float32), axis=0)
+            results[impl] = (loss, cent)
+            print(impl, "loss", loss)
+
+        # same seed => identical noise draws; the three combine impls must
+        # agree on the centroid (nullspace identity is impl-independent)
+        for impl in ("rotate", "dense"):
+            np.testing.assert_allclose(results[impl][1],
+                                       results["sparse"][1],
+                                       atol=5e-3)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_entrypoint_production_mesh():
+    """The real dryrun module on the 16x16 production mesh (512 forced
+    devices), smallest arch."""
+    out = _run_sub("""
+        from repro.launch import dryrun
+        rec = dryrun.run_one("smollm-135m", "decode_32k", multi_pod=False,
+                             save=False)
+        assert rec["bottleneck"] in ("compute", "memory", "collective")
+        assert rec["hlo_flops"] > 0 and rec["collective_bytes"] >= 0
+        print("OK", rec["bottleneck"])
+    """, devices=512, timeout=1200)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_serve_prefill_decode_on_mesh():
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import Model
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        cfg = get_config("phi3-mini-3.8b").reduced()
+        model = Model(cfg)
+        key = jax.random.PRNGKey(0)
+        with mesh:
+            params = model.init(key)
+            batch = {"tokens": jnp.zeros((4, 32), jnp.int32)}
+            logits, cache = jax.jit(model.prefill)(params, batch)
+            toks = jnp.argmax(logits, -1)
+            logits2, cache = jax.jit(model.decode_step)(params, toks, cache)
+        assert np.isfinite(np.asarray(logits2, np.float32)).all()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_client_parallel_matches_scan_path():
+    """§Perf HC-3 mode is numerically identical to the reference client
+    scan on a real mesh (per-client clipping and combine included)."""
+    out = _run_sub("""
+        import jax, numpy as np
+        from repro.configs.base import GFLConfig
+        from repro.configs.registry import get_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch import steps as S
+        from repro.models import Model
+        from repro.data import TokenStream, federated_token_batches
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        cfg = get_config("smollm-135m").reduced()
+        model = Model(cfg)
+        stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+        batch = federated_token_batches(stream, 0, 0, P=2, L=4,
+                                        per_client=1, seq_len=32)
+        res = {}
+        for cp in (False, True):
+            gfl = GFLConfig(topology="ring", privacy="none", sigma_g=0.0,
+                            grad_bound=1.0, mu=0.05, combine_impl="sparse",
+                            client_parallel=cp)
+            with mesh:
+                step = jax.jit(S.make_train_step(model, gfl, mesh, clients=4))
+                state = S.init_train_state(model, gfl, mesh,
+                                           jax.random.PRNGKey(0))
+                state, m = step(state, batch)
+            res[cp] = (float(m["loss"]), np.asarray(jax.device_get(
+                state.params["embed"]["table"]), np.float32))
+        assert abs(res[False][0] - res[True][0]) < 1e-3
+        assert np.abs(res[False][1] - res[True][1]).max() < 5e-3
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_input_specs_cover_all_shapes():
+    """input_specs builds well-formed ShapeDtypeStructs for every arch/shape
+    without touching devices (pure metadata)."""
+    out = _run_sub("""
+        import numpy as np
+        from repro.configs.base import INPUT_SHAPES
+        from repro.configs.registry import ARCH_IDS, get_config
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch import steps as S
+        from repro.models import Model
+
+        mesh = make_production_mesh()
+        n = 0
+        for arch in ARCH_IDS:
+            if arch == "gfl-logreg":
+                continue
+            model = Model(get_config(arch))
+            for name, shape in INPUT_SHAPES.items():
+                specs = S.input_specs(model, shape, mesh)
+                assert specs, (arch, name)
+                n += 1
+        assert n == 40, n
+        print("OK", n)
+    """, devices=512)
+    assert "OK 40" in out

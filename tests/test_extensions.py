@@ -1,0 +1,119 @@
+"""Beyond-paper extensions: importance sampling [22,23], secure-agg dropout
+recovery, additional server-graph topologies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.privacy.secure_agg import (
+    masked_client_mean_with_dropout,
+    pairwise_masks,
+)
+from repro.core.sampling import (
+    ISState,
+    importance_weights,
+    init_is_state,
+    sample_clients,
+    sampling_probs,
+    update_norm_estimates,
+)
+from repro.core.topology import combination_matrix, spectral_gap
+
+
+# ------------------------------------------------------- secure-agg dropout
+
+
+@given(L=st.integers(2, 8), seed=st.integers(0, 999),
+       drop_mask=st.integers(1, 200))
+@settings(max_examples=20, deadline=None)
+def test_dropout_recovery_exact(L, seed, drop_mask):
+    """Surviving-client mean is recovered exactly whatever the dropout set."""
+    key = jax.random.PRNGKey(seed)
+    upd = jax.random.normal(jax.random.fold_in(key, 1), (L, 24))
+    alive = jnp.asarray([(drop_mask >> i) & 1 for i in range(L)], bool)
+    alive = alive.at[0].set(True)  # at least one survivor
+    agg = masked_client_mean_with_dropout(upd, key, alive, mask_scale=4.0)
+    expected = upd[alive].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(expected),
+                               atol=1e-4)
+
+
+def test_dropout_all_alive_equals_plain_mean():
+    key = jax.random.PRNGKey(0)
+    upd = jax.random.normal(key, (5, 16))
+    agg = masked_client_mean_with_dropout(upd, key, jnp.ones(5, bool))
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(upd.mean(0)),
+                               atol=1e-5)
+
+
+# ------------------------------------------------------ importance sampling
+
+
+def test_importance_weights_unbiased():
+    """E[ (1/L) sum_k g_k / (K pi_k) ] == mean_k g_k under pi-sampling."""
+    P, K, L = 1, 6, 4
+    key = jax.random.PRNGKey(0)
+    g = jnp.arange(1.0, K + 1)                      # per-client "gradients"
+    state = ISState(jnp.asarray([[5, 1, 1, 1, 1, 1.0]]), jnp.zeros((1, 6),
+                                                                   jnp.int32))
+    probs = sampling_probs(state, floor=0.05)
+    est = []
+    for s in range(400):
+        idx = sample_clients(jax.random.fold_in(key, s), probs, L)
+        w = importance_weights(probs, idx)
+        est.append(float((g[idx[0]] * w[0]).mean()))
+    assert np.mean(est) == pytest.approx(float(g.mean()), rel=0.05)
+
+
+def test_norm_estimate_updates():
+    state = init_is_state(2, 4)
+    idx = jnp.asarray([[0, 1], [2, 3]])
+    norms = jnp.asarray([[10.0, 10.0], [0.1, 0.1]])
+    new = update_norm_estimates(state, idx, norms, decay=0.5)
+    assert float(new.norm_est[0, 0]) == pytest.approx(5.5)
+    assert float(new.norm_est[1, 2]) == pytest.approx(0.55)
+    assert int(new.counts[0, 0]) == 1
+    assert int(new.counts[0, 2]) == 0
+    probs = sampling_probs(new)
+    # heavier-gradient clients get sampled more
+    assert float(probs[0, 0]) > float(probs[0, 2])
+
+
+# ----------------------------------------------------------- new topologies
+
+
+@pytest.mark.parametrize("topology,P", [("hypercube", 16), ("expander", 12)])
+def test_new_topologies_assumption1(topology, P):
+    A = combination_matrix(topology, P)
+    assert np.allclose(A, A.T)
+    assert np.allclose(A.sum(0), 1.0)
+    assert spectral_gap(A) < 1.0
+
+
+def test_hypercube_beats_ring_mixing():
+    """Same node count: hypercube's spectral gap is much smaller (faster
+    consensus) at degree log2(P) vs the ring's 2."""
+    lam_ring = spectral_gap(combination_matrix("ring", 16))
+    lam_cube = spectral_gap(combination_matrix("hypercube", 16))
+    assert lam_cube < lam_ring - 0.1
+
+
+def test_hypercube_requires_power_of_two():
+    with pytest.raises(ValueError):
+        combination_matrix("hypercube", 12)
+
+
+@pytest.mark.slow
+def test_importance_sampling_gfl_converges():
+    """IS-GFL ([22,23]) converges on the paper problem, remains private."""
+    from repro.configs.base import GFLConfig
+    from repro.core.simulate import generate_problem, run_gfl_importance
+
+    prob = generate_problem(jax.random.PRNGKey(0), P=4, K=10, N=60, M=2)
+    cfg = GFLConfig(num_servers=4, clients_per_server=10, clients_sampled=4,
+                    privacy="hybrid", sigma_g=0.2, mu=0.1, topology="full",
+                    grad_bound=10.0)
+    msd, params = run_gfl_importance(prob, cfg, iters=120, seed=1)
+    assert np.isfinite(msd).all()
+    assert msd[-1] < 0.3 * msd[0]

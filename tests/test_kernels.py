@@ -1,0 +1,175 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import combination_matrix
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape)
+    return x.astype(dtype)
+
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ----------------------------------------------------------- graph_combine
+
+
+@pytest.mark.parametrize("P", [4, 10, 16])
+@pytest.mark.parametrize("D", [128, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_graph_combine_sweep(P, D, dtype):
+    A = jnp.asarray(combination_matrix("ring", P), jnp.float32)
+    key = jax.random.PRNGKey(P * D)
+    psi = _rand(key, (P, D), dtype)
+    g = _rand(jax.random.fold_in(key, 1), (P, D), dtype)
+    out = ops.graph_combine(A, psi, g)
+    exp = ref.graph_combine_ref(A.T, psi, g)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=_TOL[dtype], rtol=_TOL[dtype])
+
+
+def test_graph_combine_centroid_nullspace():
+    """Fused kernel preserves the eq.-25 identity: centroid(out) ==
+    centroid(A^T psi) == centroid(psi)."""
+    P, D = 8, 512
+    A = jnp.asarray(combination_matrix("full", P), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    psi = jax.random.normal(key, (P, D))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (P, D)) * 3.0
+    out = ops.graph_combine(A, psi, g)
+    np.testing.assert_allclose(np.asarray(out.mean(0)),
+                               np.asarray(psi.mean(0)), atol=1e-4)
+
+
+@given(P=st.integers(2, 12), D=st.sampled_from([64, 384, 777]),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_graph_combine_hypothesis(P, D, seed):
+    A = jnp.asarray(combination_matrix("full", P), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    psi = jax.random.normal(key, (P, D))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (P, D))
+    out = ops.graph_combine(A, psi, g)
+    exp = ref.graph_combine_ref(A.T, psi, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=3e-5)
+
+
+# ------------------------------------------------------------- secure_agg
+
+
+@pytest.mark.parametrize("L", [2, 5, 8])
+@pytest.mark.parametrize("D", [128, 1000])
+def test_secure_agg_sweep(L, D):
+    key = jax.random.PRNGKey(L * D)
+    upd = jax.random.normal(key, (L, D))
+    seed = jnp.array([17], jnp.uint32)
+    out = ops.secure_agg_mean(upd, seed, scale=0.7)
+    exp = ref.secure_agg_mean_ref(upd, seed, 0.7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+    # net effect == plain mean (masks cancel)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(upd.mean(0)),
+                               atol=1e-4)
+
+
+def test_secure_agg_deterministic_in_seed():
+    upd = jnp.ones((4, 256))
+    a = ops.secure_agg_mean(upd, jnp.array([1], jnp.uint32))
+    b = ops.secure_agg_mean(upd, jnp.array([1], jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------- laplace
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (10, 1000), (1, 4096)])
+@pytest.mark.parametrize("sigma", [0.1, 1.0])
+def test_laplace_sweep(shape, sigma):
+    key = jax.random.PRNGKey(3)
+    u = jax.random.uniform(key, shape, minval=-0.4999, maxval=0.4999)
+    out = ops.laplace_transform(u, sigma)
+    exp = ref.laplace_transform_ref(u, sigma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_laplace_distribution_moments():
+    key = jax.random.PRNGKey(11)
+    u = jax.random.uniform(key, (64, 8192), minval=-0.4999, maxval=0.4999)
+    out = np.asarray(ops.laplace_transform(u, 0.5))
+    assert abs(out.mean()) < 0.01
+    assert out.std() == pytest.approx(0.5, rel=0.03)
+
+
+# -------------------------------------------------------------- clip_accum
+
+
+@pytest.mark.parametrize("L", [2, 6])
+@pytest.mark.parametrize("D", [128, 2048])
+@pytest.mark.parametrize("bound", [0.5, 100.0])
+def test_clip_accum_sweep(L, D, bound):
+    key = jax.random.PRNGKey(L + D)
+    g = jax.random.normal(key, (L, D)) * 3
+    out = ops.clip_accum(g, bound)
+    exp = ref.clip_accum_ref(g, bound)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_clip_accum_enforces_bound():
+    g = jnp.ones((1, 1024)) * 10.0          # norm = 320
+    out = np.asarray(ops.clip_accum(g, 1.0))
+    assert np.linalg.norm(out) <= 1.0 + 1e-4
+
+
+@given(L=st.integers(1, 8), D=st.sampled_from([64, 333, 1024]),
+       bound=st.floats(0.1, 50.0), seed=st.integers(0, 9999))
+@settings(max_examples=15, deadline=None)
+def test_clip_accum_hypothesis(L, D, bound, seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (L, D))
+    out = ops.clip_accum(g, bound)
+    exp = ref.clip_accum_ref(g, bound)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+# --------------------------------------------------------- swa decode attn
+
+
+@pytest.mark.parametrize("C", [64, 256, 1000])
+@pytest.mark.parametrize("nvalid_frac", [0.3, 1.0])
+def test_swa_decode_attention_sweep(C, nvalid_frac):
+    B, H, KVH, Dh = 2, 8, 4, 64
+    key = jax.random.PRNGKey(C)
+    q = jax.random.normal(key, (B, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, C, KVH, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, C, KVH, Dh))
+    nvalid = jnp.array([max(int(C * nvalid_frac), 1)], jnp.int32)
+    out = ops.swa_decode_attention(q, k, v, nvalid)
+    kr = jnp.repeat(k, 2, axis=2)
+    vr = jnp.repeat(v, 2, axis=2)
+    exp = ref.swa_decode_attention_ref(q, kr, vr, nvalid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-4)
+
+
+@given(C=st.sampled_from([32, 128, 384]), nv=st.integers(1, 384),
+       seed=st.integers(0, 999))
+@settings(max_examples=10, deadline=None)
+def test_swa_decode_attention_hypothesis(C, nv, seed):
+    B, H, Dh = 1, 4, 32
+    nv = min(nv, C)
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (B, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, C, H, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, C, H, Dh))
+    nvalid = jnp.array([nv], jnp.int32)
+    out = ops.swa_decode_attention(q, k, v, nvalid)
+    exp = ref.swa_decode_attention_ref(q, k, v, nvalid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=3e-5, rtol=3e-4)

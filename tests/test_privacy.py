@@ -1,0 +1,134 @@
+"""Privacy substrate: exact cancellation identities (eqs. 23, 25) and the
+Theorem-2 accountant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import GFLConfig
+from repro.core.gfl import pairwise_masks_vec, server_aggregate
+from repro.core.privacy import (
+    PrivacyAccountant,
+    homomorphic_noise_matrix,
+    sample_laplace,
+    sensitivity,
+    sigma_for_epsilon,
+)
+from repro.core.privacy.accountant import epsilon_at
+from repro.core.privacy.homomorphic import homomorphic_combine_noise
+from repro.core.privacy.secure_agg import masked_client_mean, pairwise_masks
+from repro.core.topology import combination_matrix
+
+
+# --------------------------------------------------------------- eq. (23) --
+
+
+@given(L=st.integers(2, 12), dim=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pairwise_masks_cancel_exactly(L, dim, seed):
+    key = jax.random.PRNGKey(seed)
+    masks = pairwise_masks_vec(key, L, dim, scale=3.0)
+    # eq. 23: sum over clients is exactly zero (antisymmetric construction)
+    assert np.abs(np.asarray(masks.sum(axis=0))).max() < 1e-4
+
+
+def test_masked_mean_reveals_only_aggregate():
+    key = jax.random.PRNGKey(0)
+    upd = jax.random.normal(jax.random.fold_in(key, 1), (6, 32))
+    agg = masked_client_mean(upd, key, mask_scale=5.0)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(upd.mean(0)),
+                               atol=1e-4)
+    # but individual masked updates differ wildly from the raw ones
+    masks = pairwise_masks(key, 6, 32, 5.0)
+    assert float(jnp.abs(masks).mean()) > 1.0
+
+
+# --------------------------------------------------------------- eq. (25) --
+
+
+def _random_doubly_stochastic(P, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.random((P, P)) + 0.1
+    A = (A + A.T) / 2
+    for _ in range(200):
+        A /= A.sum(0, keepdims=True)
+        A = (A + A.T) / 2
+    A /= A.sum(0, keepdims=True)
+    return A
+
+
+@given(P=st.integers(2, 12), dim=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_homomorphic_nullspace(P, dim, seed):
+    """(1/P) sum_p sum_m a_mp g_mp == 0 for any doubly-stochastic A."""
+    A = jnp.asarray(_random_doubly_stochastic(P, seed % 1000), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    G = homomorphic_noise_matrix(key, A, dim, sigma=2.0)   # [P,P,dim]
+    total = jnp.einsum("mp,mpd->d", A, G) / P
+    assert np.abs(np.asarray(total)).max() < 1e-4
+
+
+def test_homomorphic_combine_matches_materialized():
+    P, dim = 6, 40
+    A = jnp.asarray(combination_matrix("ring", P), jnp.float32)
+    key = jax.random.PRNGKey(3)
+    psi = jax.random.normal(jax.random.fold_in(key, 9), (P, dim))
+    out = homomorphic_combine_noise(key, A, psi, sigma=0.5)
+    G = homomorphic_noise_matrix(key, A, dim, sigma=0.5)
+    expected = jnp.einsum("mp,mpd->pd", A, psi[:, None, :] * 0 + psi[:, None, :]) \
+        + jnp.einsum("mp,mpd->pd", A, G)
+    # centroid of combine output equals centroid of psi (noise cancels)
+    np.testing.assert_allclose(np.asarray(out.mean(0)),
+                               np.asarray(psi.mean(0)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=1e-3)
+
+
+def test_iid_noise_does_not_cancel():
+    cfg = GFLConfig(privacy="iid_dp", sigma_g=1.0)
+    key = jax.random.PRNGKey(0)
+    upd = jnp.zeros((8, 64))
+    agg = server_aggregate(upd, key, cfg)
+    assert float(jnp.abs(agg).mean()) > 0.01  # residual noise present
+
+
+# ---------------------------------------------------------------- Thm 2 ---
+
+
+def test_sensitivity_linear_in_iterations():
+    assert sensitivity(10, mu=0.1, B=5) == pytest.approx(10.0)
+    assert sensitivity(20, 0.1, 5) == 2 * sensitivity(10, 0.1, 5)
+
+
+def test_theorem2_sigma_epsilon_inverse():
+    mu, B, i = 0.1, 10.0, 50
+    eps = 2.0
+    sig = sigma_for_epsilon(i, mu, B, eps)
+    assert epsilon_at(i, mu, B, sig) == pytest.approx(eps)
+
+
+def test_epsilon_grows_quadratically():
+    mu, B, sig = 0.1, 10.0, 0.2
+    e = [epsilon_at(i, mu, B, sig) for i in (10, 20, 40)]
+    # eps(i) = c (1+i) i: ratio for doubling i approaches 4
+    assert 3.5 < e[1] / e[0] < 4.6
+    assert 3.7 < e[2] / e[1] < 4.3
+
+
+def test_accountant_ledger():
+    acc = PrivacyAccountant(mu=0.1, grad_bound=10.0, sigma_g=0.2)
+    e1 = acc.advance()
+    e2 = acc.advance()
+    assert e2 > e1 > 0
+    assert len(acc.history) == 2
+    horizon_sigma = acc.sigma_schedule(100, eps_target=5.0)
+    assert epsilon_at(100, 0.1, 10.0, horizon_sigma) == pytest.approx(5.0)
+
+
+def test_laplace_variance():
+    key = jax.random.PRNGKey(0)
+    x = sample_laplace(key, (200_000,), sigma=0.7)
+    assert float(jnp.std(x)) == pytest.approx(0.7, rel=0.02)

@@ -1,0 +1,150 @@
+"""Optimizers, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.base import TrainConfig
+from repro.data import (
+    TokenStream,
+    dirichlet_partition,
+    federated_token_batches,
+    logistic_client_data,
+    make_batch,
+    uniform_partition,
+)
+from repro.optim import (
+    adam,
+    clip_by_global_norm,
+    cosine_decay,
+    make_optimizer,
+    momentum,
+    sgd,
+    warmup_cosine,
+)
+
+
+# ------------------------------------------------------------------ optim --
+
+
+def _quadratic_steps(opt, lr=0.1, steps=200):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.0)}
+    state = opt.init(params)
+    grad_fn = jax.grad(lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2)
+    for t in range(steps):
+        g = grad_fn(params)
+        upd, state = opt.update(g, state, params, jnp.asarray(t), lr)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    return params
+
+
+@pytest.mark.parametrize("maker", [sgd, momentum, adam])
+def test_optimizers_minimize_quadratic(maker):
+    params = _quadratic_steps(maker())
+    for leaf in jax.tree.leaves(params):
+        assert np.abs(np.asarray(leaf)).max() < 1e-2
+
+
+def test_make_optimizer_dispatch():
+    for name in ("sgd", "momentum", "adam", "adamw"):
+        make_optimizer(TrainConfig(optimizer=name))
+    with pytest.raises(ValueError):
+        make_optimizer(TrainConfig(optimizer="lion"))
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0)
+    assert float(s(110)) < float(s(60)) < 1.0
+    c = cosine_decay(2.0, 100, final_frac=0.5)
+    assert float(c(100)) == pytest.approx(1.0)
+
+
+def test_global_norm_clip():
+    tree = {"a": jnp.ones((100,)), "b": jnp.ones((44,))}
+    clipped, nrm = clip_by_global_norm(tree, 1.0)
+    assert float(nrm) == pytest.approx(12.0)
+    total = sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(clipped))
+    assert total == pytest.approx(1.0, rel=1e-4)
+
+
+# ------------------------------------------------------------------- data --
+
+
+def test_token_stream_deterministic():
+    st = TokenStream(vocab=128, seed=1)
+    k = jax.random.PRNGKey(0)
+    a = st.sample(k, 4, 64)
+    b = st.sample(k, 4, 64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = st.sample(jax.random.PRNGKey(1), 4, 64)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert int(a.max()) < 128 and int(a.min()) >= 0
+
+
+def test_make_batch_shift():
+    st = TokenStream(vocab=64, seed=0)
+    b = make_batch(st, jax.random.PRNGKey(0), 2, 16)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_federated_batches_disjoint_and_shaped():
+    st = TokenStream(vocab=64, seed=0)
+    batch = federated_token_batches(st, seed=0, step=3, P=3, L=2,
+                                    per_client=2, seq_len=16)
+    assert batch["tokens"].shape == (3, 2, 2, 16)
+    # distinct (server, client) streams differ
+    flat = np.asarray(batch["tokens"]).reshape(6, -1)
+    assert len({tuple(r) for r in flat.tolist()}) > 1
+
+
+def test_logistic_data_means():
+    f, l = logistic_client_data(jax.random.PRNGKey(0), P=2, K=3, N=4000, M=2)
+    # class-conditional mean ~ gamma * 1
+    pos = np.asarray(f)[np.asarray(l) > 0]
+    assert np.abs(pos.mean() - 1.0) < 0.1
+
+
+def test_uniform_partition_covers():
+    idx = uniform_partition(1000, P=4, K=5, seed=0)
+    assert idx.shape == (4, 5, 50)
+    flat = idx.reshape(-1)
+    assert len(np.unique(flat)) == len(flat)
+
+
+def test_dirichlet_partition_skew():
+    labels = np.repeat(np.arange(4), 250)
+    parts = dirichlet_partition(labels, P=2, K=2, alpha=0.1, seed=0)
+    sizes = [len(parts[p][k]) for p in range(2) for k in range(2)]
+    assert sum(sizes) == pytest.approx(1000, abs=4)
+    # alpha=0.1 -> strong skew: client class hists far from uniform
+    h = np.histogram(labels[parts[0][0]], bins=4)[0]
+    assert h.max() > 2 * max(h.min(), 1)
+
+
+# ------------------------------------------------------------- checkpoint --
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                      "b": jnp.ones((3,), jnp.bfloat16)},
+            "head": jnp.full((4,), 2.0)}
+    save_checkpoint(str(tmp_path / "ckpt"), tree, step=17)
+    restored, step = load_checkpoint(str(tmp_path / "ckpt"), tree)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.ones((2, 2))}
+    save_checkpoint(str(tmp_path / "c2"), tree)
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path / "c2"), {"w": jnp.ones((3, 2))})

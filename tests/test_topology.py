@@ -1,0 +1,79 @@
+"""Combination-matrix properties (Assumption 1) across graph families."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    combination_matrix,
+    neighbor_lists,
+    permute_schedule,
+    ring_adjacency,
+    spectral_gap,
+    torus_adjacency,
+    validate_combination_matrix,
+)
+
+
+@pytest.mark.parametrize("topology", ["ring", "torus", "full", "erdos"])
+@pytest.mark.parametrize("P", [4, 10, 16])
+def test_assumption1(topology, P):
+    A = combination_matrix(topology, P)
+    assert np.allclose(A, A.T)
+    assert np.allclose(A.sum(0), 1.0)
+    assert np.allclose(A.sum(1), 1.0)
+    assert (A >= 0).all()
+    assert spectral_gap(A) < 1.0
+
+
+@given(P=st.integers(3, 24))
+@settings(max_examples=20, deadline=None)
+def test_ring_gap_hypothesis(P):
+    A = combination_matrix("ring", P)
+    lam = spectral_gap(A)
+    assert 0 <= lam < 1
+    # ring gap worsens with P (monotone family property)
+    if P >= 6:
+        assert lam > spectral_gap(combination_matrix("ring", P - 2)) - 1e-9
+
+
+def test_full_graph_gap_zero():
+    A = combination_matrix("full", 8)
+    assert spectral_gap(A) < 1e-8  # uniform weights: exact consensus
+
+
+def test_torus_adjacency_degree():
+    adj = torus_adjacency(4, 4)
+    assert (adj.sum(1) == 4).all()
+    adj = torus_adjacency(2, 8)
+    # rows wrap to the same node when rows=2: up == down neighbour
+    assert (adj.sum(1) >= 3).all()
+
+
+def test_validate_rejects_disconnected():
+    A = np.eye(4)
+    with pytest.raises(ValueError):
+        validate_combination_matrix(A)
+
+
+def test_neighbor_lists_ring():
+    A = combination_matrix("ring", 6)
+    nbrs = neighbor_lists(A)
+    for p, ns in enumerate(nbrs):
+        assert sorted(ns) == sorted([(p - 1) % 6, (p + 1) % 6])
+
+
+def test_permute_schedule_ring_is_permutation():
+    rounds = permute_schedule("ring", 8)
+    assert len(rounds) == 2
+    for rd in rounds:
+        srcs = [s for s, _ in rd]
+        dsts = [d for _, d in rd]
+        assert sorted(srcs) == list(range(8))
+        assert sorted(dsts) == list(range(8))
+
+
+def test_permute_schedule_torus():
+    rounds = permute_schedule("torus", 16, rows=4)
+    assert 2 <= len(rounds) <= 4
+    for rd in rounds:
+        assert sorted(d for _, d in rd) == list(range(16))
