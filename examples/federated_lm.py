@@ -19,7 +19,7 @@ from jax.flatten_util import ravel_pytree
 from repro.configs.base import GFLConfig
 from repro.configs.registry import get_config
 from repro.core import gfl
-from repro.core.privacy.accountant import PrivacyAccountant
+from repro.core.privacy.mechanism import list_mechanisms, mechanism_for
 from repro.core.topology import combination_matrix, spectral_gap
 from repro.data import TokenStream, federated_token_batches
 from repro.models import Model
@@ -32,7 +32,7 @@ def main():
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--privacy", default="hybrid",
-                    choices=["none", "iid_dp", "hybrid"])
+                    choices=list_mechanisms())
     ap.add_argument("--sigma", type=float, default=0.01)
     args = ap.parse_args()
 
@@ -66,8 +66,11 @@ def main():
                          jnp.zeros((), jnp.int32), key)
 
     stream = TokenStream(vocab=cfg.vocab_size, seed=0)
-    acc = PrivacyAccountant(mu=gcfg.mu, grad_bound=gcfg.grad_bound,
-                            sigma_g=gcfg.sigma_g or 1e-9)
+    # mechanism-aware accountant: the noise profile picks the curve (eps
+    # is inf for a zero-noise config — the honest Theorem-2 answer)
+    mech = mechanism_for(gcfg)
+    tracked = mech.noise_profile().curve != "none"
+    acc = mech.accountant()
     eval_batch = federated_token_batches(stream, 99, 0, args.servers, 1, 4,
                                          args.seq)
     eval_b = jax.tree.map(lambda x: x[0, 0], eval_batch)
@@ -82,7 +85,7 @@ def main():
             wc = gfl.centroid(state.params)
             lv = float(eval_loss(wc, eval_b))
             eps = acc.advance(max(args.steps // 10, 1)) \
-                if args.privacy == "hybrid" else float("nan")
+                if tracked else float("nan")
             print(f"step {i:4d}  centroid eval loss {lv:.4f}  "
                   f"eps(i)={eps:9.1f}  ({time.time()-t0:.0f}s)")
     print("done: loss should have decreased from ~ln(V) while training "

@@ -12,7 +12,8 @@ import jax
 import numpy as np
 
 from repro.configs.base import GFLConfig
-from repro.core.privacy.accountant import PrivacyAccountant
+from repro.core.privacy.accountant import PrivacyAccountant, epsilon_at
+from repro.core.privacy.mechanism import list_mechanisms
 from repro.core.simulate import generate_problem, run_gfl
 
 ITERS = 200
@@ -26,13 +27,17 @@ def main():
     prob = generate_problem(jax.random.PRNGKey(0), P=10, K=50, N=100, M=2)
     print(f"  global optimum w* = {np.asarray(prob.w_opt).round(3)}")
 
-    for scheme in ("none", "iid_dp", "hybrid"):
+    # scheduled gets the SAME total budget the fixed-sigma run spends by the
+    # horizon (Theorem 2) — it just spends it linearly instead
+    eps_budget = epsilon_at(ITERS, MU, 10.0, SIGMA)
+    for scheme in list_mechanisms():       # every registered privacy scheme
         cfg = GFLConfig(num_servers=10, clients_per_server=50,
                         clients_sampled=10, privacy=scheme, sigma_g=SIGMA,
-                        mu=MU, topology="full", grad_bound=10.0)
+                        mu=MU, topology="full", grad_bound=10.0,
+                        epsilon_target=eps_budget, epsilon_horizon=ITERS)
         msd, _ = run_gfl(prob, cfg, iters=ITERS, batch_size=10, seed=1)
         tail = float(np.mean(msd[-20:]))
-        print(f"  scheme={scheme:7s}  MSD[0]={msd[0]:.3f}  "
+        print(f"  scheme={scheme:12s}  MSD[0]={msd[0]:.3f}  "
               f"MSD[final]={tail:.5f}")
 
     acc = PrivacyAccountant(mu=MU, grad_bound=10.0, sigma_g=SIGMA)

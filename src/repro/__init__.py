@@ -1,0 +1,18 @@
+"""GFL repro package.
+
+One package-wide PRNG policy: the partitionable threefry implementation.
+With the legacy non-partitionable threefry, the values drawn for a
+tensor-parallel-sharded leaf can depend on the downstream program's
+sharding, so the same key yields DIFFERENT privacy noise under dense vs
+rotate/sparse mesh combine — breaking cross-impl noise reproducibility and
+making results depend on which repro modules happen to be imported.
+Setting it here (the root of every repro import path) makes the choice
+deterministic for the whole process; an explicit JAX_THREEFRY_PARTITIONABLE
+environment setting wins.
+"""
+import os as _os
+
+import jax as _jax
+
+if "JAX_THREEFRY_PARTITIONABLE" not in _os.environ:
+    _jax.config.update("jax_threefry_partitionable", True)

@@ -201,11 +201,17 @@ class GFLConfig:
     clients_per_server: int = 50     # K
     clients_sampled: int = 0         # L; 0 -> full participation
     topology: str = "ring"           # ring | torus | full | erdos
-    privacy: str = "hybrid"          # none | iid_dp | hybrid
-    sigma_g: float = 0.2             # server-level Laplace scale-ish (std)
+    privacy: str = "hybrid"          # registry key into
+                                     # repro.core.privacy.mechanism: none |
+                                     # iid_dp | hybrid | gaussian_dp |
+                                     # scheduled[:inner] | any registered name
+    sigma_g: float = 0.2             # server-level noise std
     grad_bound: float = 10.0         # B in Assumption 3 (clipping threshold)
     mu: float = 0.1                  # step size
-    epsilon_target: float = 0.0      # 0 -> fixed sigma; else sigma scheduled by Thm 2
+    epsilon_target: float = 0.0      # scheduled mechanism: total eps budget
+                                     # to spend by epsilon_horizon (0 -> off)
+    epsilon_horizon: int = 0         # scheduled mechanism: step at which the
+                                     # budget is exhausted (0 -> default 100)
     secure_agg: bool = True          # pairwise-mask SMC at client level
     combine_impl: str = "dense"      # dense (einsum/all-gather) | rotate | sparse
     combine_every: int = 1           # beyond-paper: combine every tau steps

@@ -9,27 +9,32 @@ One round:
   (7) server aggregation: psi_p   = (1/L) sum_k (w_{p,k} + g_{p,k})
   (8) server combination: w_p     = sum_m a_mp (psi_m + g_{mp})
 
-Privacy schemes
-  none    g == 0 everywhere.
-  iid_dp  independent Laplace at both levels (the paper's baseline).
-  hybrid  secure-agg pairwise masks at the client level (cancel exactly,
-          eq. 23) + graph-homomorphic Laplace at the server level (eq. 24-25).
+Privacy
+  Both noise insertions are owned by a pluggable
+  :class:`~repro.core.privacy.mechanism.PrivacyMechanism` resolved from the
+  string-keyed registry via ``GFLConfig.privacy`` — this module never
+  branches on the scheme name.  A mechanism supplies ``client_protect``
+  (step 7), ``server_combine`` (step 8) and a declarative
+  ``noise_profile()`` the ``PrivacyAccountant`` consumes; the Pallas-kernel
+  vs reference backend choice lives inside the mechanism.  Registered
+  schemes include the paper's three (``none``, ``iid_dp``, ``hybrid``) plus
+  ``gaussian_dp`` and the accountant-driven ``scheduled`` wrapper — see
+  docs/privacy_mechanisms.md for the API and how to add one.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GFLConfig
-from repro.core.privacy.homomorphic import (
-    combine_nonprivate,
-    homomorphic_combine_noise,
-    iid_noise_combine,
+from repro.core.privacy.mechanism import (
+    PrivacyMechanism,
+    RoundContext,
+    mechanism_for,
 )
-from repro.core.privacy.noise import sample_laplace
+from repro.core.privacy.secure_agg import pairwise_masks_vec  # noqa: F401  (re-export)
 
 
 class GFLState(NamedTuple):
@@ -46,71 +51,25 @@ def clip_to_bound(g: jax.Array, bound: float) -> jax.Array:
     return g * jnp.minimum(1.0, bound / jnp.maximum(nrm, 1e-12))
 
 
-def pairwise_masks_vec(key: jax.Array, L: int, dim: int, scale: float,
-                       dtype=jnp.float32) -> jax.Array:
-    """Vectorized pairwise secure-agg masks [L, dim]; columns sum to exactly 0.
-
-    S[j,k] = PRG(j,k) for j<k, S[k,j] = -S[j,k]; mask_j = sum_k S[j,k].
-    """
-    jj, kk = jnp.triu_indices(L, k=1)
-
-    def draw(j, k):
-        kk_ = jax.random.fold_in(jax.random.fold_in(key, j), k)
-        return jax.random.normal(kk_, (dim,), dtype)
-
-    vals = jax.vmap(draw)(jj, kk) * scale                    # [L(L-1)/2, dim]
-    S = jnp.zeros((L, L, dim), dtype)
-    S = S.at[jj, kk].set(vals)
-    S = S - jnp.swapaxes(S, 0, 1)
-    return S.sum(axis=1)
-
-
-def server_aggregate(w_clients: jax.Array, key: jax.Array, cfg: GFLConfig
-                     ) -> jax.Array:
+def server_aggregate(w_clients: jax.Array, key: jax.Array, cfg: GFLConfig,
+                     mechanism: Optional[PrivacyMechanism] = None,
+                     ctx: Optional[RoundContext] = None) -> jax.Array:
     """Aggregation step (7) for one server. w_clients: [L, D]."""
-    L, D = w_clients.shape
-    if cfg.privacy == "hybrid" and cfg.secure_agg:
-        if cfg.use_kernels:
-            from repro.kernels import ops as kops
-            seed = jax.random.randint(key, (1,), 0, 2**31 - 1).astype(
-                jnp.uint32)
-            return kops.secure_agg_mean(w_clients, seed,
-                                        scale=float(cfg.sigma_g))
-        masks = pairwise_masks_vec(key, L, D, cfg.sigma_g, w_clients.dtype)
-        return jnp.mean(w_clients + masks, axis=0)
-    if cfg.privacy == "iid_dp":
-        noise = sample_laplace(key, (L, D), cfg.sigma_g, w_clients.dtype)
-        return jnp.mean(w_clients + noise, axis=0)
-    return jnp.mean(w_clients, axis=0)
+    mech = mechanism if mechanism is not None else mechanism_for(cfg)
+    return mech.client_protect(w_clients, key, ctx)
 
 
 def server_combine(psi: jax.Array, key: jax.Array, A: jax.Array,
-                   cfg: GFLConfig) -> jax.Array:
+                   cfg: GFLConfig,
+                   mechanism: Optional[PrivacyMechanism] = None,
+                   ctx: Optional[RoundContext] = None) -> jax.Array:
     """Combination step (8) across all servers. psi: [P, D]."""
-    if cfg.privacy == "hybrid":
-        if cfg.use_kernels:
-            from repro.core.privacy.noise import sample_laplace
-            from repro.kernels import ops as kops
-            g = sample_laplace(key, psi.shape, cfg.sigma_g, psi.dtype)
-            # fused Pallas kernel computes A^T (psi+g) - g (eq. 8 + 24)
-            return kops.graph_combine(A, psi, g)
-        return homomorphic_combine_noise(key, A, psi, cfg.sigma_g)
-    if cfg.privacy == "iid_dp":
-        return iid_noise_combine(key, A, psi, cfg.sigma_g)
-    return combine_nonprivate(A, psi)
+    mech = mechanism if mechanism is not None else mechanism_for(cfg)
+    return mech.server_combine(psi, key, A, ctx)
 
 
-def gfl_round(params: jax.Array, batch, key: jax.Array, *, A: jax.Array,
-              grad_fn: Callable, cfg: GFLConfig) -> jax.Array:
-    """One full GFL round.
-
-    params: [P, D]; batch: pytree whose leaves have leading dims [P, L, ...];
-    grad_fn(w, client_batch) -> flat gradient [D].
-    """
-    P, D = params.shape
-    key_round, key_combine = jax.random.split(key)
-    server_keys = jax.random.split(key_round, P)
-
+def _client_updates(params, batch, server_keys, grad_fn, cfg, mech, ctx):
+    """(6)+(7): per-server client updates and protected aggregation."""
     def one_server(w_p, batch_p, key_p):
         def one_client(client_batch):
             g = grad_fn(w_p, client_batch)
@@ -118,10 +77,28 @@ def gfl_round(params: jax.Array, batch, key: jax.Array, *, A: jax.Array,
             return w_p - cfg.mu * g
 
         w_clients = jax.vmap(one_client)(batch_p)            # [L, D]
-        return server_aggregate(w_clients, key_p, cfg)
+        return mech.client_protect(w_clients, key_p, ctx)
 
-    psi = jax.vmap(one_server)(params, batch, server_keys)   # [P, D]
-    return server_combine(psi, key_combine, A, cfg)
+    return jax.vmap(one_server)(params, batch, server_keys)  # [P, D]
+
+
+def gfl_round(params: jax.Array, batch, key: jax.Array, *, A: jax.Array,
+              grad_fn: Callable, cfg: GFLConfig,
+              mechanism: Optional[PrivacyMechanism] = None,
+              step=0) -> jax.Array:
+    """One full GFL round.
+
+    params: [P, D]; batch: pytree whose leaves have leading dims [P, L, ...];
+    grad_fn(w, client_batch) -> flat gradient [D].  `step` (python int or
+    traced scalar) feeds step-dependent mechanisms (``scheduled``).
+    """
+    P, D = params.shape
+    mech = mechanism if mechanism is not None else mechanism_for(cfg)
+    ctx = RoundContext(step=step)
+    key_round, key_combine = jax.random.split(key)
+    server_keys = jax.random.split(key_round, P)
+    psi = _client_updates(params, batch, server_keys, grad_fn, cfg, mech, ctx)
+    return mech.server_combine(psi, key_combine, A, ctx)
 
 
 def make_gfl_step(A: jax.Array, grad_fn: Callable, cfg: GFLConfig):
@@ -129,43 +106,30 @@ def make_gfl_step(A: jax.Array, grad_fn: Callable, cfg: GFLConfig):
 
     combine_every=tau > 1 amortizes the server combination over tau local
     rounds (clients keep updating; servers only exchange every tau steps) —
-    a beyond-paper communication/utility tradeoff knob."""
+    a beyond-paper communication/utility tradeoff knob.  Non-combine rounds
+    never invoke the mechanism's server level, so no combine noise is
+    injected on them (the client level still runs)."""
     A = jnp.asarray(A)
+    mech = mechanism_for(cfg)
 
     @jax.jit
     def step(state: GFLState, batch) -> GFLState:
         key, sub = jax.random.split(state.key)
         if cfg.combine_every > 1:
-            local_cfg = cfg
             do_combine = state.step % cfg.combine_every == cfg.combine_every - 1
-
-            def round_with(params, combine: bool):
-                import dataclasses
-                c = cfg if combine else dataclasses.replace(
-                    cfg, privacy="none" if cfg.privacy == "none" else cfg.privacy)
-                key_r, key_c = jax.random.split(sub)
-                P = params.shape[0]
-                server_keys = jax.random.split(key_r, P)
-
-                def one_server(w_p, batch_p, key_p):
-                    def one_client(client_batch):
-                        g = grad_fn(w_p, client_batch)
-                        g = clip_to_bound(g, cfg.grad_bound)
-                        return w_p - cfg.mu * g
-                    w_clients = jax.vmap(one_client)(batch_p)
-                    return server_aggregate(w_clients, key_p, cfg)
-
-                psi = jax.vmap(one_server)(params, batch, server_keys)
-                if combine:
-                    return server_combine(psi, key_c, A, cfg)
-                return psi
-
+            ctx = RoundContext(step=state.step)
+            key_r, key_c = jax.random.split(sub)
+            server_keys = jax.random.split(key_r, state.params.shape[0])
+            psi = _client_updates(state.params, batch, server_keys, grad_fn,
+                                  cfg, mech, ctx)
             new_params = jax.lax.cond(
-                do_combine, lambda p: round_with(p, True),
-                lambda p: round_with(p, False), state.params)
+                do_combine,
+                lambda p: mech.server_combine(p, key_c, A, ctx),
+                lambda p: p, psi)
         else:
             new_params = gfl_round(state.params, batch, sub, A=A,
-                                   grad_fn=grad_fn, cfg=cfg)
+                                   grad_fn=grad_fn, cfg=cfg, mechanism=mech,
+                                   step=state.step)
         return GFLState(new_params, state.step + 1, key)
 
     return step

@@ -1,22 +1,61 @@
-from repro.core.privacy.noise import laplace_from_uniform, sample_laplace
+from repro.core.privacy.noise import (
+    get_sampler,
+    laplace_from_uniform,
+    sample_gaussian,
+    sample_laplace,
+)
 from repro.core.privacy.secure_agg import (
     pairwise_masks,
+    pairwise_masks_vec,
     masked_client_mean,
 )
 from repro.core.privacy.homomorphic import (
     homomorphic_noise_matrix,
     homomorphic_combine_noise,
 )
-from repro.core.privacy.accountant import PrivacyAccountant, sensitivity, sigma_for_epsilon
+from repro.core.privacy.accountant import (
+    PrivacyAccountant,
+    epsilon_at,
+    gaussian_epsilon_at,
+    gaussian_sigma_for_epsilon,
+    scheduled_epsilon_spent,
+    scheduled_sigma_at,
+    sensitivity,
+    sigma_for_epsilon,
+)
+from repro.core.privacy.mechanism import (
+    NoiseProfile,
+    PrivacyMechanism,
+    RoundContext,
+    get_mechanism,
+    list_mechanisms,
+    mechanism_for,
+    register_mechanism,
+)
 
 __all__ = [
     "laplace_from_uniform",
     "sample_laplace",
+    "sample_gaussian",
+    "get_sampler",
     "pairwise_masks",
+    "pairwise_masks_vec",
     "masked_client_mean",
     "homomorphic_noise_matrix",
     "homomorphic_combine_noise",
     "PrivacyAccountant",
+    "epsilon_at",
+    "gaussian_epsilon_at",
+    "gaussian_sigma_for_epsilon",
+    "scheduled_epsilon_spent",
+    "scheduled_sigma_at",
     "sensitivity",
     "sigma_for_epsilon",
+    "NoiseProfile",
+    "PrivacyMechanism",
+    "RoundContext",
+    "get_mechanism",
+    "list_mechanisms",
+    "mechanism_for",
+    "register_mechanism",
 ]

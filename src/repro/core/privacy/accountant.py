@@ -8,13 +8,29 @@ Theorem 2:  the hybrid scheme is eps(i)-DP at iteration i when
 Equivalently, for a fixed sigma_g, privacy decays quadratically:
 
     eps(i) = sqrt(2) * mu * B * (1 + i) * i / sigma_g = O(i^2).
+
+Beyond the paper's Laplace curve this module carries two more curves,
+selected by a :class:`PrivacyMechanism`'s ``noise_profile().curve``:
+
+``gaussian``
+    (eps, delta)-DP of the Gaussian mechanism (Gauthier et al. 2023
+    variant) under basic composition: the sqrt(2) Laplace constant becomes
+    ``sqrt(2 ln(1.25/delta))``.
+
+``scheduled``
+    Per-step noise schedule spending a uniform ``eps_target / horizon``
+    budget each iteration, so the composed epsilon is *linear* in i and
+    hits ``eps_target`` exactly at the horizon (instead of Theorem 2's
+    quadratic blow-up).  ``scheduled_sigma_at`` is traced-value safe and is
+    what the ``scheduled`` mechanism evaluates inside jit.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 
-def sensitivity(i: int, mu: float, B: float) -> float:
+def sensitivity(i, mu: float, B: float):
     """Delta(i) <= 2 mu B i (eq. 26)."""
     return 2.0 * mu * B * i
 
@@ -33,14 +49,119 @@ def sigma_for_epsilon(i: int, mu: float, B: float, eps: float) -> float:
     return (2.0 ** 0.5) * mu * B * (1 + i) * i / eps
 
 
+# --------------------------------------------------------- Gaussian curve --
+
+
+def _gaussian_const(delta: float) -> float:
+    """sqrt(2 ln(1.25/delta)) — the Gaussian-mechanism analogue of the
+    Laplace sqrt(2)."""
+    if not 0 < delta < 1:
+        raise ValueError("delta must be in (0, 1)")
+    return math.sqrt(2.0 * math.log(1.25 / delta))
+
+
+def gaussian_epsilon_at(i: int, mu: float, B: float, sigma_g: float,
+                        delta: float = 1e-5) -> float:
+    """Epsilon of the Gaussian scheme at iteration i, basic composition
+    over the per-iteration releases (sensitivity eq. 26).
+
+    ``delta`` is the PER-RELEASE delta; under basic composition the deltas
+    add, so the composed guarantee after i releases is
+    ``(returned epsilon, i * delta)``-DP — see
+    :meth:`PrivacyAccountant.delta_spent`.
+    """
+    if sigma_g <= 0:
+        return float("inf")
+    return _gaussian_const(delta) * mu * B * (1 + i) * i / sigma_g
+
+
+def gaussian_sigma_for_epsilon(i: int, mu: float, B: float, eps: float,
+                               delta: float = 1e-5) -> float:
+    """Gaussian noise std for (eps, delta)-DP at horizon i."""
+    if eps <= 0:
+        raise ValueError("epsilon must be positive")
+    return _gaussian_const(delta) * mu * B * (1 + i) * i / eps
+
+
+# -------------------------------------------------------- scheduled curve --
+
+
+def per_release_constant(distribution: str = "laplace",
+                         delta: float = 1e-5) -> float:
+    """sigma = const * Delta / eps for one release of the given additive
+    noise: sqrt(2) for Laplace (pure eps-DP), sqrt(2 ln(1.25/delta)) for
+    Gaussian ((eps, delta)-DP)."""
+    return (_gaussian_const(delta) if distribution == "gaussian"
+            else 2.0 ** 0.5)
+
+
+def scheduled_sigma_at(i, mu: float, B: float, horizon: int,
+                       eps_target: float, distribution: str = "laplace",
+                       delta: float = 1e-5):
+    """Per-step noise std of the uniform-budget schedule.
+
+    Step i releases a message of sensitivity Delta(i) = 2 mu B i and is
+    granted eps_i = eps_target / horizon, so
+
+        sigma_i = const(distribution) * Delta(i) * horizon / eps_target
+
+    with the per-release constant of the wrapped noise distribution.
+    Pure arithmetic in ``i`` — safe to call with a traced jax scalar.
+    """
+    if eps_target <= 0:
+        raise ValueError("epsilon target must be positive")
+    if horizon <= 0:
+        raise ValueError("horizon must be positive")
+    return (per_release_constant(distribution, delta)
+            * sensitivity(i, mu, B) * horizon / eps_target)
+
+
+def scheduled_epsilon_spent(i: int, horizon: int, eps_target: float) -> float:
+    """Composed epsilon after i steps of the uniform-budget schedule:
+    linear consumption, equal to eps_target exactly at i == horizon (and
+    still growing linearly past it — running longer keeps spending)."""
+    if horizon <= 0:
+        raise ValueError("horizon must be positive")
+    return eps_target * i / horizon
+
+
+_CURVES = ("laplace_thm2", "gaussian", "scheduled", "none")
+
+
 @dataclass
 class PrivacyAccountant:
-    """Tracks the epsilon ledger of a running GFL job."""
+    """Tracks the epsilon ledger of a running GFL job.
+
+    ``curve`` selects the accountant model; the default reproduces the
+    paper's Theorem-2 Laplace analysis.  Build one for a registered
+    mechanism with :meth:`from_profile` (consumes
+    ``PrivacyMechanism.noise_profile()``).
+    """
     mu: float
     grad_bound: float
     sigma_g: float
     step: int = 0
     history: list = field(default_factory=list)
+    curve: str = "laplace_thm2"
+    delta: float = 1e-5
+    horizon: int = 0
+    epsilon_target: float = 0.0
+    distribution: str = "laplace"
+
+    def __post_init__(self):
+        if self.curve not in _CURVES:
+            raise ValueError(f"unknown accountant curve {self.curve!r}; "
+                             f"expected one of {_CURVES}")
+
+    @classmethod
+    def from_profile(cls, profile, mu: float, grad_bound: float
+                     ) -> "PrivacyAccountant":
+        """Accountant configured from a mechanism's NoiseProfile."""
+        return cls(mu=mu, grad_bound=grad_bound,
+                   sigma_g=profile.server_sigma, curve=profile.curve,
+                   delta=profile.delta, horizon=profile.horizon,
+                   epsilon_target=profile.epsilon_target,
+                   distribution=profile.distribution)
 
     def advance(self, steps: int = 1) -> float:
         self.step += steps
@@ -49,11 +170,33 @@ class PrivacyAccountant:
         return eps
 
     def epsilon(self) -> float:
+        if self.curve == "none":
+            return 0.0
+        if self.curve == "gaussian":
+            return gaussian_epsilon_at(self.step, self.mu, self.grad_bound,
+                                       self.sigma_g, self.delta)
+        if self.curve == "scheduled":
+            return scheduled_epsilon_spent(self.step, self.horizon,
+                                           self.epsilon_target)
         return epsilon_at(self.step, self.mu, self.grad_bound, self.sigma_g)
+
+    def delta_spent(self) -> float:
+        """Composed delta after `step` releases: the per-release deltas add
+        under basic composition, so a Gaussian-noise ledger at step i is
+        honestly (epsilon(), i * delta)-DP — including a scheduled curve
+        wrapping a Gaussian inner.  Pure-epsilon (Laplace) curves spend 0."""
+        if self.distribution == "gaussian":
+            return self.step * self.delta
+        return 0.0
 
     def sensitivity(self) -> float:
         return sensitivity(self.step, self.mu, self.grad_bound)
 
     def sigma_schedule(self, horizon: int, eps_target: float) -> float:
         """Fixed sigma to guarantee eps_target at `horizon` steps."""
-        return sigma_for_epsilon(horizon, self.mu, self.grad_bound, eps_target)
+        if self.curve == "gaussian":
+            return gaussian_sigma_for_epsilon(horizon, self.mu,
+                                              self.grad_bound, eps_target,
+                                              self.delta)
+        return sigma_for_epsilon(horizon, self.mu, self.grad_bound,
+                                 eps_target)

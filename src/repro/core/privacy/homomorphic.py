@@ -18,17 +18,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.privacy.noise import sample_laplace
+from repro.core.privacy.noise import get_sampler
 
 
 def homomorphic_noise_matrix(key: jax.Array, A: jax.Array, dim: int,
-                             sigma: float, dtype=jnp.float32) -> jax.Array:
+                             sigma: float, dtype=jnp.float32,
+                             distribution: str = "laplace") -> jax.Array:
     """Materialize g_{mp} as a [P, P, dim] tensor (reference path).
 
     Row m is the noise server m adds to the update it sends to p (column p).
+    The null-space identity (eq. 25) holds for ANY additive noise, so the
+    distribution is a parameter (Laplace is the paper's choice; Gaussian is
+    the Gauthier et al. 2023 variant).
     """
     P = A.shape[0]
-    g = sample_laplace(key, (P, dim), sigma, dtype)            # g_m
+    g = get_sampler(distribution)(key, (P, dim), sigma, dtype)  # g_m
     diag = jnp.diagonal(A)                                     # a_mm
     self_coef = -(1.0 - diag) / diag                           # eq. (24)
     out = jnp.broadcast_to(g[:, None, :], (P, P, dim))
@@ -37,7 +41,8 @@ def homomorphic_noise_matrix(key: jax.Array, A: jax.Array, dim: int,
 
 
 def homomorphic_combine_noise(key: jax.Array, A: jax.Array, psi: jax.Array,
-                              sigma: float) -> jax.Array:
+                              sigma: float, distribution: str = "laplace"
+                              ) -> jax.Array:
     """Server combination (8) with homomorphic noise, WITHOUT materializing
     the P x P noise tensor:
 
@@ -50,17 +55,18 @@ def homomorphic_combine_noise(key: jax.Array, A: jax.Array, psi: jax.Array,
     psi: [P, dim] -> returns [P, dim].
     """
     P, dim = psi.shape
-    g = sample_laplace(key, (P, dim), sigma, psi.dtype)
+    g = get_sampler(distribution)(key, (P, dim), sigma, psi.dtype)
     mixed = A.T.astype(psi.dtype) @ psi
     noise = A.T.astype(psi.dtype) @ g - g
     return mixed + noise
 
 
 def iid_noise_combine(key: jax.Array, A: jax.Array, psi: jax.Array,
-                      sigma: float) -> jax.Array:
-    """Baseline 'standard DP' scheme: independent Laplace noise per edge."""
+                      sigma: float, distribution: str = "laplace"
+                      ) -> jax.Array:
+    """Baseline 'standard DP' scheme: independent noise per edge."""
     P, dim = psi.shape
-    g = sample_laplace(key, (P, P, dim), sigma, psi.dtype)     # g_{mp} iid
+    g = get_sampler(distribution)(key, (P, P, dim), sigma, psi.dtype)
     return A.T.astype(psi.dtype) @ psi + jnp.einsum(
         "mp,mpd->pd", A.astype(psi.dtype), g)
 

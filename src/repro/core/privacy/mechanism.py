@@ -1,0 +1,423 @@
+"""First-class privacy mechanisms for the GFL protocol.
+
+The paper's Theorems 1-2 are stated for *any* private scheme that can be
+modeled as additive noise.  This module makes that generality concrete: a
+:class:`PrivacyMechanism` owns both protocol hooks of a scheme
+
+  client level (eq. 7):  ``client_protect(w_clients, key, ctx) -> psi_p``
+  server level (eq. 8):  ``server_combine(psi, key, A, ctx) -> w``
+
+plus the pytree variants the mesh trainer uses
+(``client_noise_tree`` / ``combine_noise_tree``) and a declarative
+:meth:`~PrivacyMechanism.noise_profile` (per-level sigma, distribution,
+cancellation structure, accountant curve) consumed by the
+:class:`~repro.core.privacy.accountant.PrivacyAccountant` and by tests.
+
+Mechanisms are looked up by name in a string-keyed registry, so
+``GFLConfig.privacy`` is a registry key instead of an ``if``-ladder at every
+call site::
+
+    mech = mechanism_for(cfg)                  # parses cfg.privacy
+    psi  = mech.client_protect(w_clients, key, ctx)
+    w    = mech.server_combine(psi, key, A, ctx)
+
+Registered schemes: ``none``, ``iid_dp``, ``hybrid`` (the paper's three),
+``gaussian_dp`` (graph-homomorphic Gaussian noise, Gauthier et al. 2023,
+with its own (eps, delta) accountant curve) and ``scheduled`` (wraps any
+mechanism, spec ``"scheduled:<inner>"``, scaling sigma per-step from
+``GFLConfig.epsilon_target`` so the budget is hit exactly at
+``GFLConfig.epsilon_horizon``).
+
+Backend selection (reference jnp vs Pallas kernels, ``cfg.use_kernels``)
+happens INSIDE each mechanism; call sites never branch on it.  Adding a
+scheme is ~15 lines: subclass, override the hooks you need, decorate with
+``@register_mechanism("name")`` (see docs/privacy_mechanisms.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.privacy.accountant import (
+    PrivacyAccountant,
+    scheduled_sigma_at,
+)
+from repro.core.privacy.homomorphic import (
+    combine_nonprivate,
+    homomorphic_combine_noise,
+    iid_noise_combine,
+)
+from repro.core.privacy.noise import get_sampler
+from repro.core.privacy.secure_agg import pairwise_masks_vec
+
+DEFAULT_SCHEDULE_HORIZON = 100
+
+
+@dataclass(frozen=True)
+class NoiseProfile:
+    """Declarative description of a mechanism's injected noise.
+
+    ``client_cancels_exactly`` / ``server_cancels_exactly`` declare the
+    paper's two cancellation identities (eq. 23 / eq. 25): exact mask
+    cancellation in the client mean and centroid-nullspace server noise.
+    Tests assert the identities for every mechanism that declares them.
+    ``curve`` selects the PrivacyAccountant model.
+    """
+    distribution: str              # "laplace" | "gaussian" | "none"
+    client_sigma: float
+    server_sigma: float
+    client_cancels_exactly: bool
+    server_cancels_exactly: bool
+    curve: str = "laplace_thm2"    # accountant curve key
+    delta: float = 1e-5            # gaussian curve only
+    horizon: int = 0               # scheduled curve only
+    epsilon_target: float = 0.0    # scheduled curve only
+
+
+@dataclass(frozen=True)
+class RoundContext:
+    """Per-round information threaded into the mechanism hooks.
+
+    ``step`` may be a traced jax scalar inside jit.  ``sigma`` is an
+    override used by wrapping mechanisms (``scheduled``); when set it may
+    also be traced, and backends that require a static scale (the Pallas
+    mask kernel) transparently fall back to the reference path.
+    """
+    step: Any = 0
+    sigma: Any = None
+
+
+def _is_static_scale(sigma) -> bool:
+    """True when sigma is a concrete python/numpy float — i.e. usable as a
+    static argument to the jit-wrapped Pallas kernels."""
+    return isinstance(sigma, (int, float, np.floating))
+
+
+def _tree_noise(key: jax.Array, tree, sigma, distribution: str):
+    """Additive-noise pytree matching `tree` (leading server dim included
+    in the leaves).  Samples in f32 and casts to each leaf dtype."""
+    sampler = get_sampler(distribution)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [sampler(k, leaf.shape, sigma, jnp.float32).astype(leaf.dtype)
+           for k, leaf in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class PrivacyMechanism:
+    """Base class: the non-private protocol.  Subclasses override the
+    hooks whose behavior they change; everything defaults to no noise."""
+
+    name = "none"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ helpers
+
+    def sigma(self, ctx: Optional[RoundContext] = None):
+        """Noise std for this round (ctx.sigma overrides cfg.sigma_g)."""
+        if ctx is not None and ctx.sigma is not None:
+            return ctx.sigma
+        return self.cfg.sigma_g
+
+    def accountant(self) -> PrivacyAccountant:
+        """Accountant configured from this mechanism's noise profile."""
+        return PrivacyAccountant.from_profile(
+            self.noise_profile(), self.cfg.mu, self.cfg.grad_bound)
+
+    # ------------------------------------------------------ flat-vector API
+
+    def client_protect(self, w_clients: jax.Array, key: jax.Array,
+                       ctx: Optional[RoundContext] = None) -> jax.Array:
+        """Aggregation step (7) for one server: [L, D] -> [D]."""
+        return jnp.mean(w_clients, axis=0)
+
+    def server_combine(self, psi: jax.Array, key: jax.Array, A: jax.Array,
+                       ctx: Optional[RoundContext] = None) -> jax.Array:
+        """Combination step (8) across all servers: [P, D] -> [P, D]."""
+        return combine_nonprivate(A, psi)
+
+    # --------------------------------------------------------- pytree API
+
+    def client_noise_tree(self, key: jax.Array, tree, L: int,
+                          ctx: Optional[RoundContext] = None):
+        """Client-level residual noise for the mesh path, or None.
+
+        Mechanisms whose client noise cancels exactly in the mean (secure
+        aggregation) return None: at mesh scale the aggregate is computed
+        directly and the mask mechanics are exercised by the kernels and
+        the simulator.  Non-cancelling mechanisms return one
+        variance-equivalent draw (sigma / sqrt(L)) instead of L pytrees,
+        which would not fit HBM at 47B params (DESIGN.md section 7).
+        """
+        return None
+
+    def combine_noise_tree(self, key: jax.Array, tree,
+                           ctx: Optional[RoundContext] = None):
+        """Server-level noise pytree g for the mesh combine, or None.
+
+        The combine implementations mix ``psi + g`` and, when
+        ``noise_profile().server_cancels_exactly``, subtract each server's
+        own g afterwards (eq. 24's wire protocol).
+        """
+        return None
+
+    # -------------------------------------------------------- declaration
+
+    def noise_profile(self) -> NoiseProfile:
+        return NoiseProfile(distribution="none", client_sigma=0.0,
+                            server_sigma=0.0, client_cancels_exactly=True,
+                            server_cancels_exactly=True, curve="none")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+_REGISTRY: Dict[str, Callable[..., PrivacyMechanism]] = {}
+
+
+def register_mechanism(name: str):
+    """Class decorator registering a mechanism under `name`."""
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"privacy mechanism {name!r} already registered")
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def list_mechanisms() -> list[str]:
+    """Sorted names of all registered mechanisms."""
+    return sorted(_REGISTRY)
+
+
+def get_mechanism(spec: str, cfg) -> PrivacyMechanism:
+    """Instantiate the mechanism named by `spec` for a GFLConfig.
+
+    A spec is ``"name"`` or ``"name:arg"`` — the optional arg is passed to
+    the factory (used by ``"scheduled:<inner>"`` to pick the wrapped
+    mechanism).
+    """
+    name, _, arg = spec.partition(":")
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown privacy mechanism {name!r}; registered: "
+            f"{list_mechanisms()}") from None
+    return factory(cfg, arg) if arg else factory(cfg)
+
+
+def mechanism_for(cfg) -> PrivacyMechanism:
+    """Resolve ``cfg.privacy`` through the registry."""
+    return get_mechanism(cfg.privacy, cfg)
+
+
+# ---------------------------------------------------------------------------
+# the paper's three schemes
+# ---------------------------------------------------------------------------
+
+
+@register_mechanism("none")
+class NoPrivacy(PrivacyMechanism):
+    """g == 0 everywhere — the non-private baseline."""
+
+
+class _SecureAggClientMixin:
+    """Client level of the hybrid family: pairwise secure-agg masks that
+    cancel exactly in the mean (eq. 23), Pallas or reference backend."""
+
+    def client_protect(self, w_clients, key, ctx=None):
+        if not self.cfg.secure_agg:
+            return jnp.mean(w_clients, axis=0)
+        L, D = w_clients.shape
+        sigma = self.sigma(ctx)
+        if self.cfg.use_kernels and _is_static_scale(sigma):
+            from repro.kernels import ops as kops
+            seed = jax.random.randint(key, (1,), 0, 2**31 - 1).astype(
+                jnp.uint32)
+            return kops.secure_agg_mean(w_clients, seed, scale=float(sigma))
+        masks = pairwise_masks_vec(key, L, D, sigma, w_clients.dtype)
+        return jnp.mean(w_clients + masks, axis=0)
+
+
+class _HomomorphicServerMixin:
+    """Server level of the hybrid family: graph-homomorphic noise in the
+    nullspace of the averaging operator (eq. 24-25), any distribution."""
+
+    distribution = "laplace"
+
+    def server_combine(self, psi, key, A, ctx=None):
+        sigma = self.sigma(ctx)
+        if self.cfg.use_kernels:
+            from repro.kernels import ops as kops
+            sampler = get_sampler(self.distribution)
+            g = sampler(key, psi.shape, sigma, psi.dtype)
+            # fused Pallas kernel computes A^T (psi+g) - g (eq. 8 + 24)
+            return kops.graph_combine(A, psi, g)
+        return homomorphic_combine_noise(key, A, psi, sigma,
+                                         distribution=self.distribution)
+
+    def combine_noise_tree(self, key, tree, ctx=None):
+        return _tree_noise(key, tree, self.sigma(ctx), self.distribution)
+
+
+@register_mechanism("hybrid")
+class HybridMechanism(_SecureAggClientMixin, _HomomorphicServerMixin,
+                      PrivacyMechanism):
+    """The paper's scheme: secure-agg masks + graph-homomorphic Laplace."""
+
+    def noise_profile(self):
+        # secure_agg off -> NO client-level noise at all (plain mean), so
+        # client_sigma is 0 and cancellation holds trivially
+        return NoiseProfile(distribution="laplace",
+                            client_sigma=(self.cfg.sigma_g
+                                          if self.cfg.secure_agg else 0.0),
+                            server_sigma=self.cfg.sigma_g,
+                            client_cancels_exactly=True,
+                            server_cancels_exactly=True,
+                            curve="laplace_thm2")
+
+
+@register_mechanism("gaussian_dp")
+class GaussianDPMechanism(_SecureAggClientMixin, _HomomorphicServerMixin,
+                          PrivacyMechanism):
+    """Graph-homomorphic GAUSSIAN noise (Gauthier et al. 2023): the eq. 25
+    nullspace identity is distribution-free, but the accountant follows the
+    (eps, delta) Gaussian-mechanism curve instead of Theorem 2's Laplace
+    curve."""
+
+    distribution = "gaussian"
+
+    def noise_profile(self):
+        return NoiseProfile(distribution="gaussian",
+                            client_sigma=(self.cfg.sigma_g
+                                          if self.cfg.secure_agg else 0.0),
+                            server_sigma=self.cfg.sigma_g,
+                            client_cancels_exactly=True,
+                            server_cancels_exactly=True,
+                            curve="gaussian")
+
+
+@register_mechanism("iid_dp")
+class IIDLaplaceDP(PrivacyMechanism):
+    """The paper's baseline: independent Laplace at both levels.  Nothing
+    cancels — this is the O(mu^{-1}) utility penalty of Theorem 1."""
+
+    def client_protect(self, w_clients, key, ctx=None):
+        L, D = w_clients.shape
+        sigma = self.sigma(ctx)
+        if self.cfg.use_kernels and _is_static_scale(sigma):
+            from repro.kernels import ops as kops
+            u = jax.random.uniform(key, (L, D), w_clients.dtype,
+                                   minval=-0.5 + 1e-7, maxval=0.5 - 1e-7)
+            return jnp.mean(
+                w_clients + kops.laplace_transform(u, float(sigma)), axis=0)
+        noise = get_sampler("laplace")(key, (L, D), sigma, w_clients.dtype)
+        return jnp.mean(w_clients + noise, axis=0)
+
+    def server_combine(self, psi, key, A, ctx=None):
+        return iid_noise_combine(key, A, psi, self.sigma(ctx))
+
+    def client_noise_tree(self, key, tree, L, ctx=None):
+        # variance-equivalent single draw: mean of L iid draws has std
+        # sigma / sqrt(L), and the MSE analysis only sees the mean
+        return _tree_noise(key, tree, self.sigma(ctx) / jnp.sqrt(float(L)),
+                           "laplace")
+
+    def combine_noise_tree(self, key, tree, ctx=None):
+        return _tree_noise(key, tree, self.sigma(ctx), "laplace")
+
+    def noise_profile(self):
+        return NoiseProfile(distribution="laplace",
+                            client_sigma=self.cfg.sigma_g,
+                            server_sigma=self.cfg.sigma_g,
+                            client_cancels_exactly=False,
+                            server_cancels_exactly=False,
+                            curve="laplace_thm2")
+
+
+# ---------------------------------------------------------------------------
+# scheduled: accountant-driven per-step sigma (wraps any mechanism)
+# ---------------------------------------------------------------------------
+
+
+@register_mechanism("scheduled")
+class ScheduledMechanism(PrivacyMechanism):
+    """Accountant-driven noise schedule around any registered mechanism.
+
+    Spec ``"scheduled"`` wraps ``hybrid``; ``"scheduled:<inner>"`` wraps any
+    other scheme.  When ``cfg.epsilon_target > 0`` the round-i noise std is
+    ``scheduled_sigma_at(i+1, mu, B, horizon, epsilon_target)`` — each step
+    spends a uniform epsilon_target / horizon slice of the budget, so the
+    composed epsilon is LINEAR in i and equals epsilon_target exactly at
+    ``cfg.epsilon_horizon`` (Theorem 2's fixed-sigma curve is quadratic).
+    With ``epsilon_target == 0`` the wrapper is the identity.
+    """
+
+    def __init__(self, cfg, inner: str = "hybrid"):
+        super().__init__(cfg)
+        if inner.partition(":")[0] == "scheduled":
+            raise ValueError("scheduled mechanism cannot wrap itself")
+        self.inner = get_mechanism(inner, cfg)
+
+    @property
+    def horizon(self) -> int:
+        return self.cfg.epsilon_horizon or DEFAULT_SCHEDULE_HORIZON
+
+    def sigma_at(self, step):
+        """Noise std for (0-indexed) round `step`; traced-step safe.  The
+        per-release constant follows the INNER distribution (a Gaussian
+        inner needs sqrt(2 ln 1.25/delta) x the Laplace sigma for the same
+        per-step epsilon slice)."""
+        if self.cfg.epsilon_target <= 0:
+            return self.cfg.sigma_g
+        inner_prof = self.inner.noise_profile()
+        return scheduled_sigma_at(step + 1, self.cfg.mu, self.cfg.grad_bound,
+                                  self.horizon, self.cfg.epsilon_target,
+                                  distribution=inner_prof.distribution,
+                                  delta=inner_prof.delta)
+
+    def _inner_ctx(self, ctx: Optional[RoundContext]) -> RoundContext:
+        ctx = ctx if ctx is not None else RoundContext()
+        return replace(ctx, sigma=self.sigma_at(ctx.step))
+
+    def client_protect(self, w_clients, key, ctx=None):
+        return self.inner.client_protect(w_clients, key, self._inner_ctx(ctx))
+
+    def server_combine(self, psi, key, A, ctx=None):
+        return self.inner.server_combine(psi, key, A, self._inner_ctx(ctx))
+
+    def client_noise_tree(self, key, tree, L, ctx=None):
+        return self.inner.client_noise_tree(key, tree, L,
+                                            self._inner_ctx(ctx))
+
+    def combine_noise_tree(self, key, tree, ctx=None):
+        return self.inner.combine_noise_tree(key, tree, self._inner_ctx(ctx))
+
+    def noise_profile(self):
+        inner = self.inner.noise_profile()
+        if self.cfg.epsilon_target <= 0 or inner.distribution == "none":
+            # nothing to schedule: a noiseless inner stays noiseless (no
+            # finite-epsilon claim for a run that injects zero noise)
+            return inner
+        # which levels the inner actually injects at is structural, not a
+        # magnitude question — probe its profile at a reference sigma of 1
+        # (cfg.sigma_g may be 0 while the schedule still injects noise)
+        ref = type(self.inner)(replace(self.cfg, sigma_g=1.0)
+                               ).noise_profile()
+        # report the end-of-horizon sigma (the schedule's maximum)
+        sigma_h = float(self.sigma_at(self.horizon - 1))
+        return replace(inner,
+                       client_sigma=sigma_h if ref.client_sigma > 0 else 0.0,
+                       server_sigma=sigma_h if ref.server_sigma > 0 else 0.0,
+                       curve="scheduled", horizon=self.horizon,
+                       epsilon_target=self.cfg.epsilon_target)

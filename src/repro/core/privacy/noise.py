@@ -1,7 +1,10 @@
-"""Laplace noise utilities.
+"""Additive-noise sampling utilities (Laplace and Gaussian).
 
 The paper's server perturbations are Laplace: ``g_{p,i} ~ Lap(0, sigma_g/sqrt(2))``
-so that the *variance* is ``sigma_g**2`` (Var[Lap(0,b)] = 2 b^2).
+so that the *variance* is ``sigma_g**2`` (Var[Lap(0,b)] = 2 b^2).  The
+Gaussian-DP mechanism draws ``N(0, sigma_g**2)`` instead; both samplers are
+normalized so ``sigma`` is the standard deviation, which is the quantity the
+MSE analysis (Theorem 1) sees.
 """
 from __future__ import annotations
 
@@ -25,3 +28,26 @@ def sample_laplace(key: jax.Array, shape, sigma, dtype=jnp.float32) -> jax.Array
     u = jax.random.uniform(key, shape, dtype=dtype,
                            minval=-0.5 + 1e-7, maxval=0.5 - 1e-7)
     return laplace_from_uniform(u, jnp.asarray(b, dtype))
+
+
+def sample_gaussian(key: jax.Array, shape, sigma, dtype=jnp.float32
+                    ) -> jax.Array:
+    """Sample N(0, sigma**2) — same std normalization as sample_laplace."""
+    return jax.random.normal(key, shape, dtype=dtype) * jnp.asarray(
+        sigma, dtype)
+
+
+SAMPLERS = {
+    "laplace": sample_laplace,
+    "gaussian": sample_gaussian,
+}
+
+
+def get_sampler(distribution: str):
+    """Resolve an additive-noise sampler by name ("laplace" | "gaussian")."""
+    try:
+        return SAMPLERS[distribution]
+    except KeyError:
+        raise ValueError(
+            f"unknown noise distribution {distribution!r}; "
+            f"expected one of {sorted(SAMPLERS)}") from None

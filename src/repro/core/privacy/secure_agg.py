@@ -35,6 +35,25 @@ def pairwise_masks(key: jax.Array, num_clients: int, dim: int,
     return masks
 
 
+def pairwise_masks_vec(key: jax.Array, L: int, dim: int, scale: float,
+                       dtype=jnp.float32) -> jax.Array:
+    """Vectorized pairwise secure-agg masks [L, dim]; columns sum to exactly 0.
+
+    S[j,k] = PRG(j,k) for j<k, S[k,j] = -S[j,k]; mask_j = sum_k S[j,k].
+    """
+    jj, kk = jnp.triu_indices(L, k=1)
+
+    def draw(j, k):
+        kk_ = jax.random.fold_in(jax.random.fold_in(key, j), k)
+        return jax.random.normal(kk_, (dim,), dtype)
+
+    vals = jax.vmap(draw)(jj, kk) * scale                    # [L(L-1)/2, dim]
+    S = jnp.zeros((L, L, dim), dtype)
+    S = S.at[jj, kk].set(vals)
+    S = S - jnp.swapaxes(S, 0, 1)
+    return S.sum(axis=1)
+
+
 def masked_client_mean_with_dropout(updates: jax.Array, key: jax.Array,
                                     alive: jax.Array,
                                     mask_scale: float = 1.0) -> jax.Array:

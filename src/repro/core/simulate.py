@@ -12,7 +12,6 @@ MSD_i = ||w_c,i - w^o||^2, averaged over repeats.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Callable
 
@@ -148,13 +147,17 @@ def run_gfl_importance(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
     L = cfg.effective_clients
     grad_fn = make_grad_fn(prob.rho)
 
+    from repro.core.privacy.mechanism import RoundContext, mechanism_for
+
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
     state = gfl.init_state(k_init, P, M)
     is_state = IS.init_is_state(P, K)
+    mech = mechanism_for(cfg)
 
     @jax.jit
-    def round_fn(params, is_state, key):
+    def round_fn(params, is_state, key, step):
+        ctx = RoundContext(step=step)
         k_sel, k_batch, k_priv, k_comb = jax.random.split(key, 4)
         probs = IS.sampling_probs(is_state)
         idx = IS.sample_clients(k_sel, probs, L)               # [P, L]
@@ -174,18 +177,18 @@ def run_gfl_importance(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
                 return w_p - cfg.mu * wgt * grad, jnp.linalg.norm(grad)
 
             w_clients, norms = jax.vmap(one_client)(h_p, g_p, w_row)
-            return gfl.server_aggregate(w_clients, key_p, cfg), norms
+            return mech.client_protect(w_clients, key_p, ctx), norms
 
         psi, norms = jax.vmap(one_server)(
             params, h, g, w_is, jax.random.split(k_priv, P))
-        new_params = gfl.server_combine(psi, k_comb, A, cfg)
+        new_params = mech.server_combine(psi, k_comb, A, ctx)
         new_is = IS.update_norm_estimates(is_state, idx, norms)
         return new_params, new_is
 
     msd = []
     for i in range(iters):
         key, sub = jax.random.split(key)
-        params, is_state = round_fn(state.params, is_state, sub)
+        params, is_state = round_fn(state.params, is_state, sub, state.step)
         state = gfl.GFLState(params, state.step + 1, key)
         msd.append(float(jnp.sum((gfl.centroid(params) - prob.w_opt) ** 2)))
     return np.asarray(msd), state.params
@@ -194,15 +197,28 @@ def run_gfl_importance(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
 def run_schemes(key: jax.Array, *, iters: int = 500, sigma_g: float = 0.2,
                 P: int = 10, K: int = 50, L: int = 0, mu: float = 0.1,
                 repeats: int = 3, topology: str = "full",
-                batch_size: int = 10, grad_bound: float = 10.0):
-    """Fig. 2 harness: run none / iid_dp / hybrid on the same problem."""
+                batch_size: int = 10, grad_bound: float = 10.0,
+                schemes: tuple | None = None,
+                epsilon_target: float | None = None):
+    """Fig. 2 harness: run every registered privacy mechanism on the same
+    problem (pass `schemes` to restrict).  The ``scheduled`` mechanism
+    spends an epsilon budget over the run horizon; by default that budget
+    equals what the fixed-sigma Theorem-2 curve spends by `iters`, so its
+    row is noise-comparable to the hybrid row."""
+    from repro.core.privacy.accountant import epsilon_at
+    from repro.core.privacy.mechanism import list_mechanisms
+
+    if epsilon_target is None:
+        epsilon_target = (epsilon_at(iters, mu, grad_bound, sigma_g)
+                          if sigma_g > 0 else 0.0)
     prob = generate_problem(key, P=P, K=K)
     out = {}
-    for scheme in ("none", "iid_dp", "hybrid"):
+    for scheme in schemes if schemes is not None else list_mechanisms():
         cfg = GFLConfig(num_servers=P, clients_per_server=K,
                         clients_sampled=L, topology=topology,
                         privacy=scheme, sigma_g=sigma_g, mu=mu,
-                        grad_bound=grad_bound)
+                        grad_bound=grad_bound,
+                        epsilon_target=epsilon_target, epsilon_horizon=iters)
         traces = []
         for r in range(repeats):
             msd, _ = run_gfl(prob, cfg, iters=iters,

@@ -113,6 +113,8 @@ def analyze(compiled, lowered, meta, *, arch, shape_name, multi_pod,
     cfg, mesh, shape = meta["cfg"], meta["mesh"], meta["shape"]
     chips = int(np.prod(list(mesh.shape.values())))
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):    # older jax returns [dict]
+        cost = cost[0] if cost else {}
 
     hlo = compiled.as_text()
     # loop-scaled static analysis (cost_analysis counts while bodies once);

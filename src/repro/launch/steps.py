@@ -26,10 +26,13 @@ SERVING: consensus-model prefill / decode, no GFL protocol (params
 replicated over data axes, TP over "model"); decode caches sharded per
 `sharding.cache_specs`.
 
-IID-DP noise at the client level is applied as a single variance-equivalent
-draw (sigma/sqrt(L)) instead of L per-client draws: at 47B params, L
-materialized noise pytrees would not fit HBM, and the MSE analysis only sees
-the mean.  (DESIGN.md §7.)
+Privacy noise (which distribution, which level, whether it cancels) is owned
+by the PrivacyMechanism resolved from GFLConfig.privacy — this module only
+asks the mechanism for client/combine noise pytrees and applies the
+cancellation structure its noise_profile() declares.  Non-cancelling client
+noise is applied as a single variance-equivalent draw (sigma/sqrt(L))
+instead of L per-client draws: at 47B params, L materialized noise pytrees
+would not fit HBM, and the MSE analysis only sees the mean.  (DESIGN.md §7.)
 """
 from __future__ import annotations
 
@@ -41,7 +44,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+try:                                    # jax >= 0.4.x moved this around
+    _shard_map = jax.shard_map
+except AttributeError:                  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.configs.base import GFLConfig, InputShape, ModelConfig
+from repro.core.privacy.mechanism import RoundContext, mechanism_for
 from repro.core.topology import combination_matrix
 from repro.launch import sharding as shd
 from repro.launch.mesh import num_servers, server_axes
@@ -56,36 +65,22 @@ class TrainState(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# noise helpers (pytree Laplace, per-server keys)
-# ---------------------------------------------------------------------------
-
-
-def _tree_laplace(key, tree, sigma):
-    """Laplace(0, sigma/sqrt 2) pytree matching `tree` (one leading server
-    dim already included in the leaves)."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    out = []
-    for k, leaf in zip(keys, leaves):
-        u = jax.random.uniform(k, leaf.shape, jnp.float32,
-                               minval=-0.5 + 1e-7, maxval=0.5 - 1e-7)
-        b = sigma / np.sqrt(2.0)
-        out.append((-b * jnp.sign(u) * jnp.log1p(-2 * jnp.abs(u))
-                    ).astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-# ---------------------------------------------------------------------------
 # combine implementations
 # ---------------------------------------------------------------------------
 
 
-def _dense_combine(A, psi, g):
-    """einsum baseline: w_p = sum_m A[m,p] psi_m + (A^T g)_p - g_p."""
+def _dense_combine(A, psi, g, cancel: bool = True):
+    """einsum baseline: w_p = sum_m A[m,p] psi_m + (A^T g)_p [- g_p].
+
+    `cancel` applies the graph-homomorphic self-subtraction (eq. 24); it is
+    driven by the mechanism's ``noise_profile().server_cancels_exactly``.
+    """
     def mix(x, noise):
         mixed = jnp.einsum("mp,m...->p...", A.astype(jnp.float32),
                            (x + noise).astype(jnp.float32))
-        return (mixed - noise.astype(jnp.float32)).astype(x.dtype)
+        if cancel:
+            mixed = mixed - noise.astype(jnp.float32)
+        return mixed.astype(x.dtype)
     if g is None:
         return jax.tree.map(
             lambda x: jnp.einsum("mp,m...->p...", A.astype(jnp.float32),
@@ -157,7 +152,7 @@ def _make_shardmap_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
     def combine_fn(noisy_psi):
         return jax.tree.map(_rotate_combine_leaf, noisy_psi)
 
-    return jax.shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
+    return _shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
                          out_specs=specs)
 
 
@@ -236,7 +231,7 @@ def _make_sparse_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
     def combine_fn(noisy_psi):
         return jax.tree.map(_combine_leaf, noisy_psi)
 
-    return jax.shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
+    return _shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
                          out_specs=specs)
 
 
@@ -327,8 +322,12 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
             lambda g: jnp.mean(g.astype(jnp.float32), axis=1), grads)
         return mean_g, losses.mean(axis=1)
 
+    mech = mechanism_for(gfl)
+    profile = mech.noise_profile()
+
     def step_fn(state: TrainState, batch):
         key, k_noise, k_client = jax.random.split(state.key, 3)
+        ctx = RoundContext(step=state.step)
 
         # (6)+(7) per server, vmapped over the sharded server dim
         if gfl.client_parallel:
@@ -340,35 +339,39 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
                           - gfl.mu * g).astype(w.dtype),
             state.params, mean_g)
 
-        # (8) with privacy noise
-        if gfl.privacy in ("hybrid", "iid_dp") and gfl.sigma_g > 0:
-            g = _tree_laplace(k_noise, psi, gfl.sigma_g)
-        else:
-            g = None
-
-        if gfl.privacy == "iid_dp":
-            # client-level noise (variance-equivalent single draw) that does
-            # NOT cancel: this is the O(mu^{-1}) term of Theorem 1
+        # client-level residual noise (mechanisms whose masks cancel
+        # exactly return None; iid returns the variance-equivalent draw —
+        # the O(mu^{-1}) term of Theorem 1)
+        if profile.client_sigma > 0:
             L = jax.tree_util.tree_leaves(batch)[0].shape[1]
-            cg = _tree_laplace(k_client, psi, gfl.sigma_g / np.sqrt(L))
-            psi = jax.tree.map(lambda x, n: x + n, psi, cg)
+            cg = mech.client_noise_tree(k_client, psi, L, ctx)
+            if cg is not None:
+                psi = jax.tree.map(lambda x, n: x + n, psi, cg)
+
+        # (8) with the mechanism's server-level noise
+        g = (mech.combine_noise_tree(k_noise, psi, ctx)
+             if profile.server_sigma > 0 else None)
+        cancel = profile.server_cancels_exactly
 
         if gfl.combine_impl == "dense":
-            new_params = _dense_combine(Aj, psi, g)
+            new_params = _dense_combine(Aj, psi, g, cancel=cancel)
         else:
             maker = (_make_sparse_combine if gfl.combine_impl == "sparse"
                      else _make_shardmap_combine)
             combine = maker(mesh, cfg, gfl, A, state.params)
-            if g is not None and gfl.privacy == "hybrid":
+            if g is not None:
+                # the rotating buffer carries (psi_m + g_m) exactly as the
+                # wire protocol does; cancelling mechanisms subtract their
+                # own g_p afterwards (eq. 24)
                 noisy = jax.tree.map(lambda x, n: x + n, psi, g)
                 mixed = combine(noisy)
-                new_params = jax.tree.map(
-                    lambda m, n: (m.astype(jnp.float32)
-                                  - n.astype(jnp.float32)).astype(m.dtype),
-                    mixed, g)
-            elif g is not None:  # iid_dp server noise: mixed noise, no cancel
-                noisy = jax.tree.map(lambda x, n: x + n, psi, g)
-                new_params = combine(noisy)
+                if cancel:
+                    new_params = jax.tree.map(
+                        lambda m, n: (m.astype(jnp.float32)
+                                      - n.astype(jnp.float32)).astype(m.dtype),
+                        mixed, g)
+                else:
+                    new_params = mixed
             else:
                 new_params = combine(psi)
 

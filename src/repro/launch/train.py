@@ -21,7 +21,7 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import GFLConfig
 from repro.configs.registry import get_config
-from repro.core.privacy.accountant import PrivacyAccountant
+from repro.core.privacy.mechanism import mechanism_for
 from repro.data import TokenStream, federated_token_batches
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh, make_test_mesh, num_servers
@@ -46,7 +46,9 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--per-client", type=int, default=2)
     ap.add_argument("--privacy", default="hybrid",
-                    choices=["none", "iid_dp", "hybrid"])
+                    help="registered mechanism spec (see "
+                         "repro.core.privacy.mechanism), e.g. hybrid, "
+                         "gaussian_dp, scheduled:iid_dp")
     ap.add_argument("--sigma", type=float, default=0.01)
     ap.add_argument("--mu", type=float, default=0.1)
     ap.add_argument("--combine", default="sparse",
@@ -71,8 +73,9 @@ def main(argv=None):
     gfl_cfg = GFLConfig(topology="ring", privacy=args.privacy,
                         sigma_g=args.sigma, mu=args.mu, grad_bound=10.0,
                         combine_impl=args.combine)
-    acc = PrivacyAccountant(mu=args.mu, grad_bound=10.0,
-                            sigma_g=args.sigma or 1e-9)
+    # mechanism-aware: the noise profile picks the curve (eps is inf for
+    # a zero-noise config — the honest Theorem-2 answer)
+    acc = mechanism_for(gfl_cfg).accountant()
     stream = TokenStream(vocab=cfg.vocab_size, seed=0)
 
     with mesh:

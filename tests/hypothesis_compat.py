@@ -1,0 +1,34 @@
+"""Degrade hypothesis property tests to skips when hypothesis is missing.
+
+The suite must not ERROR at collection on a machine without the dev extras
+(pip install -r requirements-dev.txt): test modules import `given`,
+`settings`, `st` from here instead of from hypothesis directly.  With
+hypothesis installed this is a pass-through; without it, @given(...) marks
+the test skipped (finer-grained than a module-level
+pytest.importorskip("hypothesis"), which would also skip the many
+example-based tests sharing those files).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed "
+                   "(pip install -r requirements-dev.txt)")
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """st.integers(...) etc. — return placeholders; the test is
+        skip-marked before the strategy would ever be drawn from."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

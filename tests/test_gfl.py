@@ -152,3 +152,36 @@ def test_combine_every_amortized(problem):
     s2 = step(s1, batch)               # step 1: combine fires
     spread2 = float(jnp.std(s2.params[:, 0]))
     assert spread2 < spread1 * 0.9     # mixing contracted the spread
+
+
+def test_non_combine_rounds_add_no_combine_noise(problem):
+    """Regression (tau-local privatization): with combine_every=2, the
+    non-combine round must not invoke the mechanism's server level — a
+    private run's step-0 params equal the non-private run's exactly (the
+    hybrid client masks cancel in the mean), and only the combine round
+    injects per-server noise."""
+    P = problem.features.shape[0]
+    A = combination_matrix("ring", P)
+    batch = sample_round_batches(jax.random.PRNGKey(5), problem, 4, 5)
+
+    def one_step(scheme, state=None, sigma=3.0):
+        cfg = GFLConfig(num_servers=P, clients_per_server=8, privacy=scheme,
+                        sigma_g=sigma, mu=0.1, topology="ring",
+                        grad_bound=10.0, combine_every=2)
+        step = gfl.make_gfl_step(A, make_grad_fn(problem.rho), cfg)
+        if state is None:
+            state = gfl.init_state(jax.random.PRNGKey(0), P, 2)
+        return step(state, batch)
+
+    s1_hybrid = one_step("hybrid")
+    s1_none = one_step("none")
+    # step 0 is a non-combine round: no combine-level noise anywhere
+    np.testing.assert_allclose(np.asarray(s1_hybrid.params),
+                               np.asarray(s1_none.params), atol=1e-4)
+    # step 1 combines: noise appears per-server (but not in the centroid)
+    s2_hybrid = one_step("hybrid", state=s1_hybrid)
+    s2_none = one_step("none", state=s1_none)
+    assert float(jnp.abs(s2_hybrid.params - s2_none.params).max()) > 0.05
+    np.testing.assert_allclose(np.asarray(gfl.centroid(s2_hybrid.params)),
+                               np.asarray(gfl.centroid(s2_none.params)),
+                               atol=1e-4)

@@ -1,0 +1,328 @@
+"""The pluggable PrivacyMechanism API: registry round-trip, cancellation
+identities driven by noise_profile(), the scheduled accountant schedule,
+and kernel-vs-reference backend parity per mechanism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GFLConfig
+from repro.core import gfl
+from repro.core.privacy.accountant import (
+    PrivacyAccountant,
+    epsilon_at,
+    gaussian_epsilon_at,
+    gaussian_sigma_for_epsilon,
+    scheduled_epsilon_spent,
+    scheduled_sigma_at,
+    sensitivity,
+    sigma_for_epsilon,
+)
+from repro.core.privacy.mechanism import (
+    PrivacyMechanism,
+    RoundContext,
+    get_mechanism,
+    list_mechanisms,
+    mechanism_for,
+    register_mechanism,
+)
+from repro.core.simulate import (
+    generate_problem,
+    make_grad_fn,
+    sample_round_batches,
+)
+from repro.core.topology import combination_matrix
+
+P_SERVERS = 5
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return generate_problem(jax.random.PRNGKey(0), P=P_SERVERS, K=8, N=30,
+                            M=2)
+
+
+def _cfg(scheme, sigma=0.5, **kw):
+    base = dict(num_servers=P_SERVERS, clients_per_server=8, privacy=scheme,
+                sigma_g=sigma, mu=0.1, topology="ring", grad_bound=10.0,
+                epsilon_target=100.0, epsilon_horizon=50)
+    base.update(kw)
+    return GFLConfig(**base)
+
+
+def _round_once(prob, cfg, seed=7, step=0):
+    A = jnp.asarray(combination_matrix("ring", P_SERVERS))
+    grad_fn = make_grad_fn(prob.rho)
+    key = jax.random.PRNGKey(seed)
+    params = 0.1 * jax.random.normal(jax.random.fold_in(key, 1),
+                                     (P_SERVERS, 2))
+    batch = sample_round_batches(jax.random.fold_in(key, 2), prob, 4, 5)
+    new = gfl.gfl_round(params, batch, jax.random.fold_in(key, 3),
+                        A=A, grad_fn=grad_fn, cfg=cfg, step=step)
+    return params, new
+
+
+# ------------------------------------------------------------- registry ---
+
+
+def test_registry_has_the_required_mechanisms():
+    names = list_mechanisms()
+    for required in ("none", "iid_dp", "hybrid", "gaussian_dp", "scheduled"):
+        assert required in names
+    assert len(names) >= 5
+
+
+def test_unknown_mechanism_raises():
+    cfg = _cfg("nope_not_a_scheme")
+    with pytest.raises(ValueError, match="unknown privacy mechanism"):
+        mechanism_for(cfg)
+
+
+def test_scheduled_cannot_wrap_itself():
+    with pytest.raises(ValueError, match="cannot wrap itself"):
+        mechanism_for(_cfg("scheduled:scheduled"))
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_mechanism("hybrid")(PrivacyMechanism)
+
+
+def test_spec_parsing_selects_inner():
+    mech = mechanism_for(_cfg("scheduled:iid_dp"))
+    assert mech.inner.name == "iid_dp"
+    assert mechanism_for(_cfg("scheduled")).inner.name == "hybrid"
+
+
+@pytest.mark.parametrize("scheme", list_mechanisms())
+def test_registry_round_trip(problem, scheme):
+    """Every registered mechanism runs one full gfl_round to finite params."""
+    _, new = _round_once(problem, _cfg(scheme))
+    assert new.shape == (P_SERVERS, 2)
+    assert np.isfinite(np.asarray(new)).all()
+
+
+# ----------------------------------------------- cancellation identities --
+
+
+@pytest.mark.parametrize("scheme", list_mechanisms())
+def test_centroid_identity_follows_noise_profile(problem, scheme):
+    """For ANY mechanism whose noise_profile() declares exact server-level
+    cancellation, one round's centroid equals the non-private centroid;
+    mechanisms that declare no cancellation must visibly perturb it."""
+    sigma = 2.0
+    cfg = _cfg(scheme, sigma=sigma)
+    prof = mechanism_for(cfg).noise_profile()
+    _, w_none = _round_once(problem, _cfg("none", sigma=0.0))
+    _, w = _round_once(problem, cfg)
+    c_none = np.asarray(gfl.centroid(w_none))
+    c = np.asarray(gfl.centroid(w))
+    if prof.server_cancels_exactly:
+        np.testing.assert_allclose(c, c_none, atol=1e-4)
+        if prof.server_sigma > 0:
+            # individual servers DO see noise (privacy is not free-riding)
+            assert float(jnp.abs(w - w_none).max()) > 0.05
+    else:
+        assert np.abs(c - c_none).max() > 1e-3
+
+
+# ------------------------------------------------------ scheduled budget --
+
+
+def test_scheduled_hits_epsilon_target_at_horizon():
+    mu, B, H, eps_target = 0.1, 10.0, 40, 8.0
+    cfg = _cfg("scheduled", mu=mu, grad_bound=B, epsilon_target=eps_target,
+               epsilon_horizon=H)
+    mech = mechanism_for(cfg)
+    # composing the per-step Laplace releases (eps_i = sqrt(2) Delta(i) /
+    # sigma_i) over the schedule spends exactly the target
+    spent = sum((2.0 ** 0.5) * sensitivity(i, mu, B) / mech.sigma_at(i - 1)
+                for i in range(1, H + 1))
+    assert spent == pytest.approx(eps_target)
+    assert scheduled_epsilon_spent(H, H, eps_target) == pytest.approx(
+        eps_target)
+    # cross-check against the fixed-sigma Theorem-2 accountant: the sigma
+    # epsilon_at inverts for the same (horizon, target) satisfies the same
+    # budget, and the mechanism's accountant agrees at the horizon
+    fixed = sigma_for_epsilon(H, mu, B, eps_target)
+    assert epsilon_at(H, mu, B, fixed) == pytest.approx(eps_target)
+    acc = mech.accountant()
+    assert acc.curve == "scheduled"
+    assert acc.advance(H) == pytest.approx(eps_target)
+
+
+def test_scheduled_sigma_grows_linearly_per_step():
+    s1 = scheduled_sigma_at(1, 0.1, 10.0, 50, 10.0)
+    s10 = scheduled_sigma_at(10, 0.1, 10.0, 50, 10.0)
+    assert s10 == pytest.approx(10 * s1)
+
+
+def test_scheduled_constant_follows_inner_distribution():
+    """scheduled:gaussian_dp must draw sqrt(2 ln 1.25/delta)/sqrt(2) times
+    MORE noise than scheduled:hybrid for the same per-step epsilon slice —
+    the Laplace constant would under-noise the Gaussian ledger ~3.4x."""
+    cfg = _cfg("scheduled", epsilon_target=10.0, epsilon_horizon=50)
+    lap = mechanism_for(cfg)
+    gau = mechanism_for(_cfg("scheduled:gaussian_dp", epsilon_target=10.0,
+                             epsilon_horizon=50))
+    ratio = float(gau.sigma_at(7)) / float(lap.sigma_at(7))
+    expected = (2 * np.log(1.25 / 1e-5)) ** 0.5 / (2.0 ** 0.5)
+    assert ratio == pytest.approx(expected, rel=1e-6)
+    # and the gaussian ledger then prices each step at exactly its slice
+    eps_slice = (gaussian_epsilon_at(8, cfg.mu, cfg.grad_bound,
+                                     float(gau.sigma_at(7)))
+                 - gaussian_epsilon_at(7, cfg.mu, cfg.grad_bound,
+                                       float(gau.sigma_at(7))))
+    assert eps_slice == pytest.approx(10.0 / 50, rel=1e-6)
+
+
+def test_scheduled_noise_actually_scales_with_step(problem):
+    """The dead epsilon_target knob now changes behavior: later rounds of
+    the scheduled mechanism inject more server noise than early rounds."""
+    cfg = _cfg("scheduled", epsilon_target=5000.0, epsilon_horizon=50)
+    _, w_none = _round_once(problem, _cfg("none", sigma=0.0))
+    _, w_early = _round_once(problem, cfg, step=0)
+    _, w_late = _round_once(problem, cfg, step=49)
+    dev_early = float(jnp.abs(w_early - w_none).max())
+    dev_late = float(jnp.abs(w_late - w_none).max())
+    assert dev_late > 5 * dev_early > 0
+
+
+def test_scheduled_identity_without_target(problem):
+    """epsilon_target == 0 -> the wrapper is the inner mechanism."""
+    cfg_s = _cfg("scheduled", sigma=0.4, epsilon_target=0.0)
+    cfg_h = _cfg("hybrid", sigma=0.4)
+    _, w_s = _round_once(problem, cfg_s)
+    _, w_h = _round_once(problem, cfg_h)
+    np.testing.assert_allclose(np.asarray(w_s), np.asarray(w_h), atol=1e-6)
+
+
+# ------------------------------------------------- accountant integration --
+
+
+@pytest.mark.parametrize("scheme", list_mechanisms())
+def test_accountant_consumes_noise_profile(scheme):
+    cfg = _cfg(scheme)
+    mech = mechanism_for(cfg)
+    acc = mech.accountant()
+    assert isinstance(acc, PrivacyAccountant)
+    eps = acc.advance(10)
+    if mech.noise_profile().curve == "none":
+        assert eps == 0.0
+    else:
+        assert eps > 0
+
+
+def test_gaussian_curve_differs_from_laplace():
+    cfg_g = _cfg("gaussian_dp", sigma=0.5)
+    cfg_h = _cfg("hybrid", sigma=0.5)
+    eps_g = mechanism_for(cfg_g).accountant().advance(20)
+    eps_h = mechanism_for(cfg_h).accountant().advance(20)
+    # sqrt(2 ln(1.25/1e-5)) ≈ 4.84 vs sqrt(2): Gaussian basic composition
+    # charges more per release at the default delta
+    assert eps_g > 2 * eps_h
+    assert eps_g == pytest.approx(
+        gaussian_epsilon_at(20, cfg_g.mu, cfg_g.grad_bound, 0.5))
+
+
+def test_gaussian_sigma_epsilon_inverse():
+    mu, B, i, eps = 0.1, 10.0, 50, 2.0
+    sig = gaussian_sigma_for_epsilon(i, mu, B, eps)
+    assert gaussian_epsilon_at(i, mu, B, sig) == pytest.approx(eps)
+
+
+def test_gaussian_delta_composes():
+    """Basic composition adds the per-release deltas: the ledger must
+    report (eps, i*delta), not a fixed delta."""
+    for scheme, spends in (("gaussian_dp", True),
+                           ("scheduled:gaussian_dp", True),
+                           ("hybrid", False), ("none", False)):
+        acc = mechanism_for(_cfg(scheme)).accountant()
+        acc.advance(30)
+        assert acc.delta_spent() == pytest.approx(
+            30 * acc.delta if spends else 0.0), scheme
+
+
+def test_profile_honest_without_secure_agg():
+    """secure_agg=False injects NO client noise — the profile must say so
+    rather than declare phantom non-cancelling client noise."""
+    for scheme in ("hybrid", "gaussian_dp"):
+        prof = mechanism_for(_cfg(scheme, secure_agg=False)).noise_profile()
+        assert prof.client_sigma == 0.0
+        assert prof.client_cancels_exactly
+
+
+def test_scheduled_profile_honest_about_inner_structure():
+    """The scheduled wrapper must not declare noise its inner never
+    injects: scheduled:none stays untracked (no finite-epsilon claim for a
+    zero-noise run), and a no-mask inner keeps client_sigma 0 — while a
+    noisy inner reports the schedule sigma even when cfg.sigma_g == 0."""
+    prof = mechanism_for(_cfg("scheduled:none")).noise_profile()
+    assert prof.curve == "none" and prof.server_sigma == 0.0
+    prof = mechanism_for(
+        _cfg("scheduled", secure_agg=False)).noise_profile()
+    assert prof.curve == "scheduled"
+    assert prof.client_sigma == 0.0 and prof.server_sigma > 0
+    prof = mechanism_for(_cfg("scheduled", sigma=0.0)).noise_profile()
+    assert prof.server_sigma > 0 and prof.client_sigma > 0
+
+
+# -------------------------------------------------- kernel backend parity --
+
+
+@pytest.mark.parametrize("scheme", list_mechanisms())
+def test_kernel_vs_reference_zero_noise_exact(problem, scheme):
+    """With sigma 0 both backends must agree bit-for-bit up to float
+    addition order — the backend choice lives inside the mechanism."""
+    base = _cfg(scheme, sigma=0.0, epsilon_target=0.0)
+    kern = dataclasses.replace(base, use_kernels=True)
+    _, w_ref = _round_once(problem, base)
+    _, w_kern = _round_once(problem, kern)
+    np.testing.assert_allclose(np.asarray(w_kern), np.asarray(w_ref),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("scheme",
+                         [s for s in list_mechanisms()
+                          if mechanism_for(_cfg(s)).noise_profile()
+                          .server_cancels_exactly])
+def test_kernel_vs_reference_centroid_parity(problem, scheme):
+    """At sigma > 0 the kernel PRG differs from the reference draws, but
+    any cancelling mechanism's centroid is noise-free on both backends."""
+    base = _cfg(scheme, sigma=0.3)
+    kern = dataclasses.replace(base, use_kernels=True)
+    _, w_ref = _round_once(problem, base)
+    _, w_kern = _round_once(problem, kern)
+    np.testing.assert_allclose(np.asarray(gfl.centroid(w_kern)),
+                               np.asarray(gfl.centroid(w_ref)), atol=1e-4)
+
+
+# ----------------------------------------------------------- pytree hooks --
+
+
+def test_client_noise_tree_variance_equivalent():
+    cfg = _cfg("iid_dp", sigma=1.0)
+    mech = mechanism_for(cfg)
+    tree = {"w": jnp.zeros((4, 20_000))}
+    out = mech.client_noise_tree(jax.random.PRNGKey(0), tree, L=16)
+    assert float(jnp.std(out["w"])) == pytest.approx(1.0 / 4.0, rel=0.05)
+
+
+def test_cancelling_mechanisms_have_no_client_tree_noise():
+    for scheme in ("none", "hybrid", "gaussian_dp", "scheduled"):
+        mech = mechanism_for(_cfg(scheme))
+        tree = {"w": jnp.zeros((2, 8))}
+        assert mech.client_noise_tree(jax.random.PRNGKey(0), tree, 4) is None
+
+
+def test_combine_noise_tree_distribution():
+    tree = {"w": jnp.zeros((4, 50_000))}
+    for scheme, kurtosis_high in (("hybrid", True), ("gaussian_dp", False)):
+        mech = mechanism_for(_cfg(scheme, sigma=1.0))
+        g = np.asarray(mech.combine_noise_tree(jax.random.PRNGKey(1),
+                                               tree)["w"]).ravel()
+        assert g.std() == pytest.approx(1.0, rel=0.03)
+        excess_kurt = ((g - g.mean()) ** 4).mean() / g.var() ** 2 - 3.0
+        assert (excess_kurt > 1.5) == kurtosis_high  # Laplace: 3, Normal: 0

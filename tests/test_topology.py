@@ -1,7 +1,8 @@
 """Combination-matrix properties (Assumption 1) across graph families."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.topology import (
     combination_matrix,
