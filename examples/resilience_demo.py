@@ -1,0 +1,75 @@
+"""Resilience demo: the paper's robustness claim, made executable.
+
+Runs the Section-V logistic problem under increasingly hostile failure
+regimes — i.i.d. link drops, correlated server outages, straggling servers
+re-announcing stale psi, and mid-round client dropout with dropout-safe
+secure aggregation — and prints, per regime, the steady-state MSD and the
+realized spectral-gap trajectory statistics (lambda_i = rho(A_i - 11^T/P):
+0 = instant consensus, -> 1 = no mixing).  Every per-round effective
+matrix A_i stays symmetric, doubly stochastic and connected (Assumption 1),
+so the protocol keeps its guarantees while the topology churns.
+
+    PYTHONPATH=src python examples/resilience_demo.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core.resilience import TopologyProcess, parse_fault_spec
+from repro.core.simulate import (
+    base_combination_matrix,
+    generate_problem,
+    run_gfl,
+)
+
+ITERS = 150
+
+REGIMES = [
+    ("failure-free", "none"),
+    ("flaky links", "links:0.2"),
+    ("links + outages", "links:0.1+outage:0.1"),
+    ("stragglers (stale<=3)", "straggler:0.3,stale=3"),
+    ("client dropout 30%", "dropout:0.3"),
+    ("everything at once",
+     "links:0.1+outage:0.05+straggler:0.2,stale=2+dropout:0.2"),
+]
+
+
+def main():
+    print("generating the paper's synthetic logistic problem "
+          "(P=8, K=20, hypercube servers)...")
+    prob = generate_problem(jax.random.PRNGKey(0), P=8, K=20)
+
+    print(f"{'regime':24s} {'fault spec':>44s} {'MSD tail':>9s} "
+          f"{'gap mean':>9s} {'gap worst':>9s}")
+    for name, spec in REGIMES:
+        cfg = GFLConfig(num_servers=8, clients_per_server=20,
+                        clients_sampled=5, topology="hypercube",
+                        privacy="hybrid", sigma_g=0.2, mu=0.1,
+                        grad_bound=10.0, fault=spec, topology_seed=7)
+        msd, _, gaps = run_gfl(prob, cfg, iters=ITERS, batch_size=10,
+                               seed=1, record_gaps=True)
+        tail = float(np.mean(msd[-15:]))
+        print(f"{name:24s} {spec:>44s} {tail:9.5f} "
+              f"{gaps.mean():9.3f} {gaps.max():9.3f}")
+
+    # the process itself is a first-class object: realize rounds directly
+    fault = parse_fault_spec("links:0.3")
+    proc = TopologyProcess(
+        base_combination_matrix(GFLConfig(topology="hypercube"), 8),
+        fault, seed=7)
+    from repro.core.topology import spectral_gap
+    real = proc.realize(0)
+    dropped = int((proc.base_mask & ~real.link_mask).sum() // 2)
+    total = int(proc.base_mask.sum() // 2)
+    print(f"\nround-0 realization under {fault.to_spec()}: "
+          f"{dropped} of {total} links down, "
+          f"spectral gap {real.gap:.3f} "
+          f"(base {spectral_gap(proc.base_A):.3f})")
+    print("every realized A_i satisfies Assumption 1 — symmetric, doubly "
+          "stochastic, connected — so convergence degrades gracefully "
+          "instead of breaking.")
+
+
+if __name__ == "__main__":
+    main()

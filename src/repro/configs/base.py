@@ -200,7 +200,17 @@ class GFLConfig:
     num_servers: int = 10            # P
     clients_per_server: int = 50     # K
     clients_sampled: int = 0         # L; 0 -> full participation
-    topology: str = "ring"           # ring | torus | full | erdos
+    topology: str = "ring"           # ring | torus | full | erdos |
+                                     # hypercube | expander
+                                     # (see repro.core.topology)
+    topology_seed: int = 0           # seed for randomized graph families
+                                     # (erdos, expander) AND the per-round
+                                     # fault realizations of `fault`
+    torus_rows: int = 0              # torus row count; 0 -> near-square auto
+    fault: str = "none"              # resilience fault spec, e.g.
+                                     # "links:0.1+dropout:0.2" — see
+                                     # repro.core.resilience and
+                                     # docs/resilience.md for the grammar
     privacy: str = "hybrid"          # registry key into
                                      # repro.core.privacy.mechanism: none |
                                      # iid_dp | hybrid | gaussian_dp |

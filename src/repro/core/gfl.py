@@ -68,21 +68,35 @@ def server_combine(psi: jax.Array, key: jax.Array, A: jax.Array,
     return mech.server_combine(psi, key, A, ctx)
 
 
-def _client_updates(params, batch, server_keys, grad_fn, cfg, mech, ctx):
-    """(6)+(7): per-server client updates and protected aggregation."""
-    def one_server(w_p, batch_p, key_p):
+def _client_updates(params, batch, server_keys, grad_fn, cfg, mech, ctx,
+                    alive=None):
+    """(6)+(7): per-server client updates and protected aggregation.
+
+    ``alive`` ([P, L] bool, optional) marks the clients that survived the
+    round; when given, aggregation routes through the mechanism's
+    dropout-safe ``client_protect_masked`` hook."""
+    def updates(w_p, batch_p):
         def one_client(client_batch):
             g = grad_fn(w_p, client_batch)
             g = clip_to_bound(g, cfg.grad_bound)
             return w_p - cfg.mu * g
 
-        w_clients = jax.vmap(one_client)(batch_p)            # [L, D]
-        return mech.client_protect(w_clients, key_p, ctx)
+        return jax.vmap(one_client)(batch_p)                 # [L, D]
 
-    return jax.vmap(one_server)(params, batch, server_keys)  # [P, D]
+    if alive is None:
+        def one_server(w_p, batch_p, key_p):
+            return mech.client_protect(updates(w_p, batch_p), key_p, ctx)
+
+        return jax.vmap(one_server)(params, batch, server_keys)  # [P, D]
+
+    def one_server(w_p, batch_p, key_p, alive_p):
+        return mech.client_protect_masked(updates(w_p, batch_p), key_p,
+                                          alive_p, ctx)
+
+    return jax.vmap(one_server)(params, batch, server_keys, alive)
 
 
-def gfl_round(params: jax.Array, batch, key: jax.Array, *, A: jax.Array,
+def gfl_round(params: jax.Array, batch, key: jax.Array, *, A,
               grad_fn: Callable, cfg: GFLConfig,
               mechanism: Optional[PrivacyMechanism] = None,
               step=0) -> jax.Array:
@@ -91,24 +105,52 @@ def gfl_round(params: jax.Array, batch, key: jax.Array, *, A: jax.Array,
     params: [P, D]; batch: pytree whose leaves have leading dims [P, L, ...];
     grad_fn(w, client_batch) -> flat gradient [D].  `step` (python int or
     traced scalar) feeds step-dependent mechanisms (``scheduled``).
+
+    ``A`` is either a fixed [P, P] combination matrix or a
+    :class:`~repro.core.resilience.process.TopologyProcess`, in which case
+    the round's effective A_i and client participation mask are realized
+    from ``step`` (which must then be concrete).  Stragglers are stateful
+    across rounds and therefore live only in the step functions
+    (:func:`make_gfl_step` with a process / the resilience runtime).
     """
     P, D = params.shape
     mech = mechanism if mechanism is not None else mechanism_for(cfg)
+    alive = None
+    from repro.core.resilience.process import TopologyProcess
+    if isinstance(A, TopologyProcess):
+        proc, i = A, int(step)
+        real = proc.realize(i)
+        A = jnp.asarray(real.A, jnp.float32)
+        if proc.fault.client_dropout > 0:
+            from repro.core.resilience.runtime import ensure_dropout_safe
+            ensure_dropout_safe(mech.noise_profile())
+            L = jax.tree_util.tree_leaves(batch)[0].shape[1]
+            alive = jnp.asarray(proc.client_alive(i, L))
     ctx = RoundContext(step=step)
     key_round, key_combine = jax.random.split(key)
     server_keys = jax.random.split(key_round, P)
-    psi = _client_updates(params, batch, server_keys, grad_fn, cfg, mech, ctx)
+    psi = _client_updates(params, batch, server_keys, grad_fn, cfg, mech, ctx,
+                          alive)
     return mech.server_combine(psi, key_combine, A, ctx)
 
 
-def make_gfl_step(A: jax.Array, grad_fn: Callable, cfg: GFLConfig):
+def make_gfl_step(A, grad_fn: Callable, cfg: GFLConfig):
     """jit-ready (state, batch) -> state transition.
+
+    ``A`` may be a fixed combination matrix or a
+    :class:`~repro.core.resilience.process.TopologyProcess` — the latter
+    dispatches to the resilience runtime (per-round effective A_i, client
+    dropout, stragglers; see repro.core.resilience).
 
     combine_every=tau > 1 amortizes the server combination over tau local
     rounds (clients keep updating; servers only exchange every tau steps) —
     a beyond-paper communication/utility tradeoff knob.  Non-combine rounds
     never invoke the mechanism's server level, so no combine noise is
     injected on them (the client level still runs)."""
+    from repro.core.resilience.process import TopologyProcess
+    if isinstance(A, TopologyProcess):
+        from repro.core.resilience.runtime import make_resilient_gfl_step
+        return make_resilient_gfl_step(A, grad_fn, cfg)
     A = jnp.asarray(A)
     mech = mechanism_for(cfg)
 

@@ -5,9 +5,12 @@ from repro.core.privacy.noise import (
     sample_laplace,
 )
 from repro.core.privacy.secure_agg import (
+    masked_client_mean,
+    masked_client_mean_dropout_vec,
+    masked_client_mean_with_dropout,
+    pair_stream_matrix,
     pairwise_masks,
     pairwise_masks_vec,
-    masked_client_mean,
 )
 from repro.core.privacy.homomorphic import (
     homomorphic_noise_matrix,
@@ -40,7 +43,10 @@ __all__ = [
     "get_sampler",
     "pairwise_masks",
     "pairwise_masks_vec",
+    "pair_stream_matrix",
     "masked_client_mean",
+    "masked_client_mean_dropout_vec",
+    "masked_client_mean_with_dropout",
     "homomorphic_noise_matrix",
     "homomorphic_combine_noise",
     "PrivacyAccountant",

@@ -52,7 +52,10 @@ from repro.core.privacy.homomorphic import (
     iid_noise_combine,
 )
 from repro.core.privacy.noise import get_sampler
-from repro.core.privacy.secure_agg import pairwise_masks_vec
+from repro.core.privacy.secure_agg import (
+    masked_client_mean_dropout_vec,
+    pairwise_masks_vec,
+)
 
 DEFAULT_SCHEDULE_HORIZON = 100
 
@@ -66,6 +69,16 @@ class NoiseProfile:
     cancellation in the client mean and centroid-nullspace server noise.
     Tests assert the identities for every mechanism that declares them.
     ``curve`` selects the PrivacyAccountant model.
+
+    ``client_dropout_safe`` declares whether the client level stays honest
+    when sampled clients DROP OUT mid-round (``GFLConfig.fault`` with a
+    ``dropout:`` component): pairwise secure-agg masks only cancel if the
+    mechanism implements Bonawitz-style survivor renormalization
+    (``client_protect_masked``).  The resilience runtime and the mesh
+    trainer REFUSE to run client dropout through a mechanism that declares
+    exact client cancellation without dropout safety — otherwise orphaned
+    masks would silently corrupt the aggregate while the accountant keeps
+    claiming the cancellation-based budget.  See docs/resilience.md.
     """
     distribution: str              # "laplace" | "gaussian" | "none"
     client_sigma: float
@@ -76,6 +89,7 @@ class NoiseProfile:
     delta: float = 1e-5            # gaussian curve only
     horizon: int = 0               # scheduled curve only
     epsilon_target: float = 0.0    # scheduled curve only
+    client_dropout_safe: bool = False  # survives mid-round client dropout
 
 
 @dataclass(frozen=True)
@@ -99,11 +113,22 @@ def _is_static_scale(sigma) -> bool:
 
 def _tree_noise(key: jax.Array, tree, sigma, distribution: str):
     """Additive-noise pytree matching `tree` (leading server dim included
-    in the leaves).  Samples in f32 and casts to each leaf dtype."""
+    in the leaves).  Samples in f32 and casts to each leaf dtype.
+
+    ``sigma`` may be a scalar or a 1-D [P] array (per-server scale, e.g.
+    realized survivor counts under client dropout); the vector case
+    broadcasts over each leaf's leading server dim."""
     sampler = get_sampler(distribution)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
-    out = [sampler(k, leaf.shape, sigma, jnp.float32).astype(leaf.dtype)
+
+    def leaf_sigma(leaf):
+        if isinstance(sigma, jax.Array) and sigma.ndim == 1:
+            return sigma.reshape(sigma.shape + (1,) * (leaf.ndim - 1))
+        return sigma
+
+    out = [sampler(k, leaf.shape, leaf_sigma(leaf), jnp.float32
+                   ).astype(leaf.dtype)
            for k, leaf in zip(keys, leaves)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -136,6 +161,21 @@ class PrivacyMechanism:
                        ctx: Optional[RoundContext] = None) -> jax.Array:
         """Aggregation step (7) for one server: [L, D] -> [D]."""
         return jnp.mean(w_clients, axis=0)
+
+    def client_protect_masked(self, w_clients: jax.Array, key: jax.Array,
+                              alive: jax.Array,
+                              ctx: Optional[RoundContext] = None) -> jax.Array:
+        """Aggregation step (7) under mid-round client DROPOUT.
+
+        ``alive``: [L] bool participation mask.  The default (no client
+        noise) is the exact mean over survivors; mechanisms with client
+        noise override to keep their structure honest under dropout and
+        declare it via ``noise_profile().client_dropout_safe``.  Only
+        invoked by the resilience runtime when the fault model actually
+        drops clients — the all-alive path stays on ``client_protect``.
+        """
+        n_alive = jnp.maximum(alive.sum(), 1)
+        return jnp.where(alive[:, None], w_clients, 0.0).sum(axis=0) / n_alive
 
     def server_combine(self, psi: jax.Array, key: jax.Array, A: jax.Array,
                        ctx: Optional[RoundContext] = None) -> jax.Array:
@@ -172,7 +212,8 @@ class PrivacyMechanism:
     def noise_profile(self) -> NoiseProfile:
         return NoiseProfile(distribution="none", client_sigma=0.0,
                             server_sigma=0.0, client_cancels_exactly=True,
-                            server_cancels_exactly=True, curve="none")
+                            server_cancels_exactly=True, curve="none",
+                            client_dropout_safe=True)
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +289,18 @@ class _SecureAggClientMixin:
         masks = pairwise_masks_vec(key, L, D, sigma, w_clients.dtype)
         return jnp.mean(w_clients + masks, axis=0)
 
+    def client_protect_masked(self, w_clients, key, alive, ctx=None):
+        """Dropout-safe secure aggregation: Bonawitz survivor
+        renormalization (orphaned pair streams subtracted, mean rescaled
+        over survivors).  The Pallas mask kernel has no dropout variant, so
+        this always takes the reference vectorized path — dropout rounds
+        are rare and the kernel path still serves the all-alive rounds."""
+        if not self.cfg.secure_agg:
+            return PrivacyMechanism.client_protect_masked(
+                self, w_clients, key, alive, ctx)
+        return masked_client_mean_dropout_vec(w_clients, key, alive,
+                                              self.sigma(ctx))
+
 
 class _HomomorphicServerMixin:
     """Server level of the hybrid family: graph-homomorphic noise in the
@@ -284,7 +337,8 @@ class HybridMechanism(_SecureAggClientMixin, _HomomorphicServerMixin,
                             server_sigma=self.cfg.sigma_g,
                             client_cancels_exactly=True,
                             server_cancels_exactly=True,
-                            curve="laplace_thm2")
+                            curve="laplace_thm2",
+                            client_dropout_safe=True)
 
 
 @register_mechanism("gaussian_dp")
@@ -304,7 +358,8 @@ class GaussianDPMechanism(_SecureAggClientMixin, _HomomorphicServerMixin,
                             server_sigma=self.cfg.sigma_g,
                             client_cancels_exactly=True,
                             server_cancels_exactly=True,
-                            curve="gaussian")
+                            curve="gaussian",
+                            client_dropout_safe=True)
 
 
 @register_mechanism("iid_dp")
@@ -324,13 +379,28 @@ class IIDLaplaceDP(PrivacyMechanism):
         noise = get_sampler("laplace")(key, (L, D), sigma, w_clients.dtype)
         return jnp.mean(w_clients + noise, axis=0)
 
+    def client_protect_masked(self, w_clients, key, alive, ctx=None):
+        """Per-client iid noise has no pair structure to orphan: the
+        survivor mean of (update + noise) is already honest — noise scale
+        per survivor is unchanged, only the 1/L' averaging factor moves."""
+        L, D = w_clients.shape
+        noise = get_sampler("laplace")(key, (L, D), self.sigma(ctx),
+                                       w_clients.dtype)
+        return PrivacyMechanism.client_protect_masked(
+            self, w_clients + noise, key, alive, ctx)
+
     def server_combine(self, psi, key, A, ctx=None):
         return iid_noise_combine(key, A, psi, self.sigma(ctx))
 
     def client_noise_tree(self, key, tree, L, ctx=None):
         # variance-equivalent single draw: mean of L iid draws has std
-        # sigma / sqrt(L), and the MSE analysis only sees the mean
-        return _tree_noise(key, tree, self.sigma(ctx) / jnp.sqrt(float(L)),
+        # sigma / sqrt(L), and the MSE analysis only sees the mean.  L may
+        # be traced and/or a per-server [P] vector (realized survivor
+        # counts under client dropout — each server's noise scales with
+        # ITS survivor count, not the fleet average).
+        return _tree_noise(key, tree,
+                           self.sigma(ctx)
+                           / jnp.sqrt(jnp.asarray(L, jnp.float32)),
                            "laplace")
 
     def combine_noise_tree(self, key, tree, ctx=None):
@@ -342,7 +412,8 @@ class IIDLaplaceDP(PrivacyMechanism):
                             server_sigma=self.cfg.sigma_g,
                             client_cancels_exactly=False,
                             server_cancels_exactly=False,
-                            curve="laplace_thm2")
+                            curve="laplace_thm2",
+                            client_dropout_safe=True)
 
 
 # ---------------------------------------------------------------------------
@@ -392,6 +463,10 @@ class ScheduledMechanism(PrivacyMechanism):
 
     def client_protect(self, w_clients, key, ctx=None):
         return self.inner.client_protect(w_clients, key, self._inner_ctx(ctx))
+
+    def client_protect_masked(self, w_clients, key, alive, ctx=None):
+        return self.inner.client_protect_masked(w_clients, key, alive,
+                                                self._inner_ctx(ctx))
 
     def server_combine(self, psi, key, A, ctx=None):
         return self.inner.server_combine(psi, key, A, self._inner_ctx(ctx))

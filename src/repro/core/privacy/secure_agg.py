@@ -24,6 +24,11 @@ def pairwise_masks(key: jax.Array, num_clients: int, dim: int,
     """Return masks [L, dim] with columns summing exactly to zero.
 
     mask_k = sum_{j<k} -PRG(j,k) + sum_{j>k} +PRG(k,j)
+
+    O(L^2) python-loop REFERENCE implementation: production call sites use
+    the vectorized :func:`pairwise_masks_vec` (same PRG streams, so the two
+    agree to float addition order — the hypothesis test asserts it); this
+    version is kept as the oracle that test compares against.
     """
     L = num_clients
     masks = jnp.zeros((L, dim), dtype)
@@ -35,11 +40,15 @@ def pairwise_masks(key: jax.Array, num_clients: int, dim: int,
     return masks
 
 
-def pairwise_masks_vec(key: jax.Array, L: int, dim: int, scale: float,
+def pair_stream_matrix(key: jax.Array, L: int, dim: int, scale: float,
                        dtype=jnp.float32) -> jax.Array:
-    """Vectorized pairwise secure-agg masks [L, dim]; columns sum to exactly 0.
+    """Antisymmetric pair-stream tensor S [L, L, dim].
 
-    S[j,k] = PRG(j,k) for j<k, S[k,j] = -S[j,k]; mask_j = sum_k S[j,k].
+    ``S[j, k] = PRG(j, k)`` for ``j < k`` and ``S[k, j] = -S[j, k]``:
+    entry (j, k) is the mask stream client j adds on account of its pair
+    with client k.  ``mask_j = S[j].sum(0)``.  Exposing S (rather than only
+    the row sums) is what makes Bonawitz-style dropout recovery a masked
+    reduction instead of an O(L^2) python loop.
     """
     jj, kk = jnp.triu_indices(L, k=1)
 
@@ -50,8 +59,42 @@ def pairwise_masks_vec(key: jax.Array, L: int, dim: int, scale: float,
     vals = jax.vmap(draw)(jj, kk) * scale                    # [L(L-1)/2, dim]
     S = jnp.zeros((L, L, dim), dtype)
     S = S.at[jj, kk].set(vals)
-    S = S - jnp.swapaxes(S, 0, 1)
-    return S.sum(axis=1)
+    return S - jnp.swapaxes(S, 0, 1)
+
+
+def pairwise_masks_vec(key: jax.Array, L: int, dim: int, scale: float,
+                       dtype=jnp.float32) -> jax.Array:
+    """Vectorized pairwise secure-agg masks [L, dim]; columns sum to exactly 0.
+
+    S[j,k] = PRG(j,k) for j<k, S[k,j] = -S[j,k]; mask_j = sum_k S[j,k].
+    """
+    return pair_stream_matrix(key, L, dim, scale, dtype).sum(axis=1)
+
+
+def masked_client_mean_dropout_vec(updates: jax.Array, key: jax.Array,
+                                   alive: jax.Array,
+                                   mask_scale: float = 1.0) -> jax.Array:
+    """Vectorized, jit-able survivor-renormalized aggregation (7).
+
+    Bonawitz-style recovery when clients drop out mid-round: masks between
+    two survivors cancel in the sum by themselves, masks between two dead
+    clients never arrive, and each orphaned alive<->dead stream is
+    reconstructed from the survivors' seed shares and subtracted.  The mean
+    is then RESCALED over the survivor count — the result equals the exact
+    mean over alive clients, so the server still only learns an aggregate.
+
+    updates: [L, D]; alive: [L] bool.  This is the production path; the
+    O(L^2) python-loop :func:`masked_client_mean_with_dropout` is kept only
+    as the reference the hypothesis test compares against.
+    """
+    L, D = updates.shape
+    S = pair_stream_matrix(key, L, D, mask_scale, updates.dtype)
+    masks = S.sum(axis=1)
+    total = jnp.where(alive[:, None], updates + masks, 0.0).sum(axis=0)
+    orphan = alive[:, None] & ~alive[None, :]        # j alive, k dead
+    repair = jnp.where(orphan[..., None], S, 0.0).sum(axis=(0, 1))
+    n_alive = jnp.maximum(alive.sum(), 1)
+    return (total - repair) / n_alive
 
 
 def masked_client_mean_with_dropout(updates: jax.Array, key: jax.Array,
@@ -68,6 +111,10 @@ def masked_client_mean_with_dropout(updates: jax.Array, key: jax.Array,
 
     updates: [L, D]; alive: [L] bool.  Returns the mean over ALIVE clients,
     exactly (the privacy property survives dropout).
+
+    O(L^2) python-loop REFERENCE implementation — production call sites
+    (the hybrid-family mechanisms and the resilience runtime) use the
+    vectorized :func:`masked_client_mean_dropout_vec`.
     """
     L, D = updates.shape
     masks = pairwise_masks(key, L, D, mask_scale, updates.dtype)
@@ -96,5 +143,5 @@ def masked_client_mean(updates: jax.Array, key: jax.Array,
     server learns only the aggregate.
     """
     L, dim = updates.shape
-    masks = pairwise_masks(key, L, dim, mask_scale, updates.dtype)
+    masks = pairwise_masks_vec(key, L, dim, mask_scale, updates.dtype)
     return jnp.mean(updates + masks, axis=0)

@@ -1,0 +1,33 @@
+"""Resilience runtime: fault injection, time-varying topologies, and
+dropout-safe execution of the GFL protocol.
+
+The paper's stated motivation for the graph-federated architecture is
+robustness to communication failures and server overload; this package
+makes that regime executable.  See docs/resilience.md for the fault-spec
+grammar, the per-round re-normalization that keeps Assumption 1 true under
+failures, and the dropout semantics of secure aggregation.
+"""
+from repro.core.resilience.faults import FaultModel, parse_fault_spec
+from repro.core.resilience.process import (
+    RoundRealization,
+    TopologyProcess,
+    fold_dropped_links,
+)
+from repro.core.resilience.runtime import (
+    ResilientGFLState,
+    ensure_dropout_safe,
+    init_resilient_state,
+    make_resilient_gfl_step,
+)
+
+__all__ = [
+    "FaultModel",
+    "parse_fault_spec",
+    "RoundRealization",
+    "TopologyProcess",
+    "fold_dropped_links",
+    "ResilientGFLState",
+    "ensure_dropout_safe",
+    "init_resilient_state",
+    "make_resilient_gfl_step",
+]

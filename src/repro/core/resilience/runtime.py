@@ -1,0 +1,136 @@
+"""Resilient GFL execution: time-varying A_i, stragglers, client dropout.
+
+This is the stateful driver the fault-injected paths share.  Per round it
+
+  1. realizes the round topology ``A_i`` from the
+     :class:`~repro.core.resilience.process.TopologyProcess` (host-side,
+     deterministic in ``(topology_seed, round)``) and feeds it to the jitted
+     step as a *traced* argument — one compilation serves every round;
+  2. applies mid-round client dropout through the mechanism's
+     ``client_protect_masked`` hook (Bonawitz survivor renormalization for
+     the secure-agg family), after checking the mechanism DECLARES dropout
+     safety (``noise_profile().client_dropout_safe``);
+  3. lets straggling servers re-announce their most recent psi instead of
+     running the round's client work, bounded by ``FaultModel.staleness``
+     consecutive rounds (a server at the bound is forced to refresh — the
+     runtime waits for it, production-style bounded staleness).
+
+Key-splitting mirrors :func:`repro.core.gfl.gfl_round` exactly, and each
+piece of fault machinery is only traced in when its probability is nonzero,
+so a zero-probability fault model produces BIT-IDENTICAL trajectories to
+the static path (regression-tested).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GFLConfig
+from repro.core import gfl
+from repro.core.privacy.mechanism import RoundContext, mechanism_for
+from repro.core.resilience.process import TopologyProcess
+
+
+class ResilientGFLState(NamedTuple):
+    params: jax.Array     # [P, D] per-server flat models
+    step: jax.Array       # scalar int32
+    key: jax.Array        # PRNG key
+    psi_cache: jax.Array  # [P, D] most recent psi each server announced
+    psi_age: jax.Array    # [P] int32: consecutive rounds spent straggling
+
+
+def ensure_dropout_safe(profile, *, where: str = "client dropout") -> None:
+    """Refuse to run client dropout through a mechanism that does not
+    declare ``client_dropout_safe``.  Cancelling mechanisms would leave
+    orphaned pair masks in the aggregate; non-cancelling mechanisms with
+    client noise would silently fall back to the NOISE-FREE base
+    ``client_protect_masked`` — either way the accountant keeps claiming a
+    budget the released aggregate no longer pays for."""
+    if not profile.client_dropout_safe:
+        raise ValueError(
+            f"{where}: mechanism does not declare client_dropout_safe — "
+            "its client level is not guaranteed honest once a sampled "
+            "client vanishes mid-round (orphaned secure-agg masks, or a "
+            "noise-free fallback survivor mean).  Implement "
+            "client_protect_masked for the scheme and declare "
+            "client_dropout_safe=True in noise_profile(), or run fault "
+            "specs without a dropout: component.")
+
+
+def init_resilient_state(key: jax.Array, P: int, dim: int,
+                         init_scale: float = 0.0) -> ResilientGFLState:
+    """Same draws as :func:`repro.core.gfl.init_state` (bit-compatible),
+    plus the straggler psi cache seeded with the initial params."""
+    base = gfl.init_state(key, P, dim, init_scale)
+    return ResilientGFLState(base.params, base.step, base.key,
+                             psi_cache=base.params,
+                             psi_age=jnp.zeros((P,), jnp.int32))
+
+
+def make_resilient_gfl_step(process: TopologyProcess, grad_fn: Callable,
+                            cfg: GFLConfig) -> Callable:
+    """(state, batch) -> state under the process's fault model.
+
+    The returned callable realizes the round topology on the host, then
+    runs one jitted step with ``(A_i, client_alive, straggler)`` as traced
+    inputs.  It accepts either a :class:`ResilientGFLState` or a plain
+    :class:`~repro.core.gfl.GFLState` (promoted on first use).
+    """
+    mech = mechanism_for(cfg)
+    fault = process.fault
+    use_dropout = fault.client_dropout > 0
+    use_straggler = fault.straggler > 0
+    if use_dropout:
+        ensure_dropout_safe(mech.noise_profile())
+
+    @jax.jit
+    def inner(state: ResilientGFLState, batch, A, alive, straggler):
+        key, sub = jax.random.split(state.key)
+        ctx = RoundContext(step=state.step)
+        key_r, key_c = jax.random.split(sub)
+        Pn = state.params.shape[0]
+        server_keys = jax.random.split(key_r, Pn)
+        # the SAME (6)+(7) implementation as the static path — bit-identity
+        # under a null fault model is by construction, not by parallel code
+        psi = gfl._client_updates(state.params, batch, server_keys, grad_fn,
+                                  cfg, mech, ctx,
+                                  alive if use_dropout else None)
+
+        if use_straggler:
+            # bounded staleness: a server may straggle only while its
+            # cached psi is younger than the staleness bound
+            stale_ok = straggler & (state.psi_age < fault.staleness)
+            psi = jnp.where(stale_ok[:, None], state.psi_cache, psi)
+            new_age = jnp.where(stale_ok, state.psi_age + 1, 0)
+            new_cache = psi
+        else:
+            new_cache, new_age = state.psi_cache, state.psi_age
+
+        if cfg.combine_every > 1:
+            do_combine = (state.step % cfg.combine_every
+                          == cfg.combine_every - 1)
+            new_params = jax.lax.cond(
+                do_combine,
+                lambda p: mech.server_combine(p, key_c, A, ctx),
+                lambda p: p, psi)
+        else:
+            new_params = mech.server_combine(psi, key_c, A, ctx)
+        return ResilientGFLState(new_params, state.step + 1, key,
+                                 new_cache, new_age)
+
+    def step(state, batch) -> ResilientGFLState:
+        if not isinstance(state, ResilientGFLState):
+            state = ResilientGFLState(
+                state.params, state.step, state.key,
+                psi_cache=state.params,
+                psi_age=jnp.zeros((state.params.shape[0],), jnp.int32))
+        i = int(state.step)
+        real = process.realize(i)
+        L = jax.tree_util.tree_leaves(batch)[0].shape[1]
+        alive = jnp.asarray(process.client_alive(i, L))
+        return inner(state, batch, jnp.asarray(real.A, jnp.float32),
+                     alive, jnp.asarray(real.straggler))
+
+    return step

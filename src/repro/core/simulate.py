@@ -107,17 +107,37 @@ def sample_round_batches(key: jax.Array, prob: LogisticProblem, L: int,
     return (h, g)
 
 
+def base_combination_matrix(cfg: GFLConfig, P: int) -> np.ndarray:
+    """The config's base A (topology family + seed/rows knobs applied)."""
+    return combination_matrix(cfg.topology, P, rows=cfg.torus_rows,
+                              seed=cfg.topology_seed)
+
+
 def run_gfl(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
             batch_size: int = 10, seed: int = 0, record_every: int = 1,
-            A: np.ndarray | None = None):
-    """Run the protocol; return (msd_trace [T], final params [P, D])."""
+            A: np.ndarray | None = None,
+            process: "TopologyProcess | None" = None,
+            record_gaps: bool = False):
+    """Run the protocol; return (msd_trace [T], final params [P, D]).
+
+    ``cfg.fault != "none"`` (or an explicit ``process``) routes through the
+    resilience runtime: per-round effective A_i, client dropout, straggler
+    servers (see repro.core.resilience).  ``record_gaps=True`` additionally
+    returns the per-round ``spectral_gap(A_i)`` trajectory.
+    """
+    from repro.core.resilience import TopologyProcess
+
     P = prob.features.shape[0]
-    if A is None:
-        A = combination_matrix(cfg.topology, P)
-    A = jnp.asarray(A)
+    if process is None and cfg.fault != "none":
+        base = A if A is not None else base_combination_matrix(cfg, P)
+        process = TopologyProcess(base, cfg.fault, seed=cfg.topology_seed)
+    if process is not None:
+        step = gfl.make_gfl_step(process, make_grad_fn(prob.rho), cfg)
+    else:
+        if A is None:
+            A = base_combination_matrix(cfg, P)
+        step = gfl.make_gfl_step(jnp.asarray(A), make_grad_fn(prob.rho), cfg)
     L = cfg.effective_clients
-    grad_fn = make_grad_fn(prob.rho)
-    step = gfl.make_gfl_step(A, grad_fn, cfg)
 
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
@@ -132,6 +152,11 @@ def run_gfl(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
         if i % record_every == 0:
             wc = gfl.centroid(state.params)
             msd.append(float(jnp.sum((wc - prob.w_opt) ** 2)))
+    if record_gaps:
+        from repro.core.topology import spectral_gap
+        gaps = (process.gap_trajectory(iters) if process is not None
+                else np.full(iters, spectral_gap(np.asarray(A))))
+        return np.asarray(msd), state.params, gaps
     return np.asarray(msd), state.params
 
 
@@ -143,7 +168,7 @@ def run_gfl_importance(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
     from repro.core import sampling as IS
 
     P, K, N, M = prob.features.shape
-    A = jnp.asarray(combination_matrix(cfg.topology, P))
+    A = jnp.asarray(base_combination_matrix(cfg, P))
     L = cfg.effective_clients
     grad_fn = make_grad_fn(prob.rho)
 
@@ -199,12 +224,15 @@ def run_schemes(key: jax.Array, *, iters: int = 500, sigma_g: float = 0.2,
                 repeats: int = 3, topology: str = "full",
                 batch_size: int = 10, grad_bound: float = 10.0,
                 schemes: tuple | None = None,
-                epsilon_target: float | None = None):
+                epsilon_target: float | None = None,
+                fault: str = "none", topology_seed: int = 0):
     """Fig. 2 harness: run every registered privacy mechanism on the same
     problem (pass `schemes` to restrict).  The ``scheduled`` mechanism
     spends an epsilon budget over the run horizon; by default that budget
     equals what the fixed-sigma Theorem-2 curve spends by `iters`, so its
-    row is noise-comparable to the hybrid row."""
+    row is noise-comparable to the hybrid row.  ``fault`` injects the
+    resilience fault model into every scheme's run (same realizations, so
+    the rows stay comparable)."""
     from repro.core.privacy.accountant import epsilon_at
     from repro.core.privacy.mechanism import list_mechanisms
 
@@ -217,7 +245,8 @@ def run_schemes(key: jax.Array, *, iters: int = 500, sigma_g: float = 0.2,
         cfg = GFLConfig(num_servers=P, clients_per_server=K,
                         clients_sampled=L, topology=topology,
                         privacy=scheme, sigma_g=sigma_g, mu=mu,
-                        grad_bound=grad_bound,
+                        grad_bound=grad_bound, fault=fault,
+                        topology_seed=topology_seed,
                         epsilon_target=epsilon_target, epsilon_horizon=iters)
         traces = []
         for r in range(repeats):
@@ -226,3 +255,26 @@ def run_schemes(key: jax.Array, *, iters: int = 500, sigma_g: float = 0.2,
             traces.append(msd)
         out[scheme] = np.mean(np.stack(traces), axis=0)
     return prob, out
+
+
+def fault_sweep(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
+                drop_probs, fault_kind: str = "links",
+                batch_size: int = 10, seed: int = 0):
+    """MSD-vs-failure-rate sweep: run ``cfg`` under ``<fault_kind>:<p>`` for
+    every p in ``drop_probs``.  Returns rows of
+    ``(p, msd_tail, gap_mean, gap_worst)`` — the realized spectral-gap
+    trajectory (lambda_i = rho(A_i - 11^T/P), larger = slower mixing) is
+    what connects the failure rate to the convergence hit.
+    """
+    from dataclasses import replace as dc_replace
+
+    rows = []
+    for p in drop_probs:
+        spec = "none" if p == 0 else f"{fault_kind}:{p:g}"
+        cfg_p = dc_replace(cfg, fault=spec)
+        msd, _, gaps = run_gfl(prob, cfg_p, iters=iters,
+                               batch_size=batch_size, seed=seed,
+                               record_gaps=True)
+        tail = float(np.mean(msd[-max(iters // 10, 5):]))
+        rows.append((float(p), tail, float(gaps.mean()), float(gaps.max())))
+    return rows

@@ -143,7 +143,10 @@ def spectral_gap(A: np.ndarray) -> float:
     return float(np.max(np.abs(np.linalg.eigvals(M))))
 
 
-def validate_combination_matrix(A: np.ndarray, atol: float = 1e-10) -> None:
+def validate_combination_matrix(A: np.ndarray, atol: float = 1e-10, *,
+                                gap: float | None = None) -> None:
+    """Assert Assumption 1.  Pass a precomputed ``gap`` to skip the O(P^3)
+    eigendecomposition (per-round fault realizations already have it)."""
     P = A.shape[0]
     if not np.allclose(A, A.T, atol=atol):
         raise ValueError("combination matrix must be symmetric")
@@ -151,8 +154,11 @@ def validate_combination_matrix(A: np.ndarray, atol: float = 1e-10) -> None:
         raise ValueError("combination matrix must be doubly stochastic")
     if np.any(A < -atol):
         raise ValueError("combination matrix must be nonnegative")
-    if P > 1 and spectral_gap(A) >= 1.0 - 1e-12:
-        raise ValueError("graph must be connected (spectral gap >= 1)")
+    if P > 1:
+        if gap is None:
+            gap = spectral_gap(A)
+        if gap >= 1.0 - 1e-12:
+            raise ValueError("graph must be connected (spectral gap >= 1)")
 
 
 def neighbor_lists(A: np.ndarray) -> list[list[int]]:

@@ -89,7 +89,7 @@ def _dense_combine(A, psi, g, cancel: bool = True):
 
 
 def _make_shardmap_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
-                           A: np.ndarray, params_like):
+                           params_like):
     """shard_map ring-rotation / sparse combine over the server axes.
 
     Works per-leaf: each device holds its server's model-parallel shard of
@@ -97,10 +97,14 @@ def _make_shardmap_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
     other server's (psi_m + g_m) past each device, which accumulates
     a_mp-weighted contributions.  For `sparse` + ring graphs only the two
     neighbour exchanges run.
+
+    The combination matrix is a replicated runtime ARGUMENT of the returned
+    callable (weights are gathered per rotation step), so per-round
+    effective matrices from the resilience runtime slot straight in: a dead
+    link is a zero-weight permute.
     """
     saxes = server_axes(mesh)
     Pn = num_servers(mesh)
-    Aj = jnp.asarray(A, jnp.float32)
 
     leaf_paths = [
         "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -124,7 +128,7 @@ def _make_shardmap_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
     def ring_perm():
         return [((i + 1) % Pn, i) for i in range(Pn)]  # recv from right
 
-    def _rotate_combine_leaf(x):
+    def _rotate_combine_leaf(x, Aj):
         """x: local shard with leading server dim of size 1 (this server's
         psi_p + g_p).  Returns sum_m a_mp (psi_m + g_m) for this p.
 
@@ -149,23 +153,26 @@ def _make_shardmap_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
             acc = acc + Aj[src, p].astype(wt) * buf.astype(wt)
         return acc.astype(x.dtype)
 
-    def combine_fn(noisy_psi):
-        return jax.tree.map(_rotate_combine_leaf, noisy_psi)
+    def combine_fn(noisy_psi, Aj):
+        return jax.tree.map(lambda x: _rotate_combine_leaf(x, Aj), noisy_psi)
 
-    return _shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
+    return _shard_map(combine_fn, mesh=mesh, in_specs=(specs, P()),
                          out_specs=specs)
 
 
 def _make_sparse_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
-                         A: np.ndarray, params_like):
+                         params_like):
     """Neighbour-only combine for ring (1 server axis) / torus (pod x data).
 
     Collective bytes per leaf: deg * shard (vs (P-1) * shard for rotate).
     Requires A to be the Metropolis ring (single axis) or the product graph
-    A_pod (x) A_ring (multi-pod); weights are read off A at trace time.
+    A_pod (x) A_ring (multi-pod).  On a single server axis the weights are
+    gathered from the runtime A argument (so per-round effective matrices
+    work: a dead neighbour link is a zero weight); the multi-pod product
+    path derives its factor weights statically and therefore only supports
+    the static base graph (make_train_step enforces this).
     """
     saxes = server_axes(mesh)
-    Aj = jnp.asarray(A, jnp.float32)
     Pn = num_servers(mesh)
 
     leaf_paths = [
@@ -180,7 +187,7 @@ def _make_sparse_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
         for ps in leaf_paths
     ])
 
-    def _combine_leaf(x):
+    def _combine_leaf(x, Aj):
         wt = x.dtype if gfl.combine_wire == "bf16" else jnp.float32
         if len(saxes) == 1:
             ax = saxes[0]
@@ -208,30 +215,31 @@ def _make_sparse_combine(mesh, cfg: ModelConfig, gfl: GFLConfig,
         pd = jax.lax.axis_index(data_ax)
         left = jax.lax.ppermute(
             x, data_ax, [((i + 1) % nd, i) for i in range(nd)])
-        right = jax.lax.ppermute(
-            x, data_ax, [((i - 1) % nd, i) for i in range(nd)])
         acc = (Ad[pd, pd].astype(wt) * x.astype(wt)
-               + Ad[jnp.mod(pd + 1, nd), pd].astype(wt) * left.astype(wt)
-               + Ad[jnp.mod(pd - 1, nd), pd].astype(wt) * right.astype(wt))
-        acc = acc.astype(x.dtype)
-        pp = jax.lax.axis_index(pod_ax)
-        other = jax.lax.ppermute(
-            acc, pod_ax, [((i + 1) % npod, i) for i in range(npod)])
-        acc = (Ap[pp, pp].astype(wt) * acc.astype(wt)
+               + Ad[jnp.mod(pd + 1, nd), pd].astype(wt) * left.astype(wt))
+        if nd > 2:   # on a 2-ring left == right: don't double-count
+            right = jax.lax.ppermute(
+                x, data_ax, [((i - 1) % nd, i) for i in range(nd)])
+            acc = acc + Ad[jnp.mod(pd - 1, nd), pd].astype(wt) \
+                * right.astype(wt)
+        y = acc.astype(x.dtype)          # data-mixed value, BEFORE pod mix:
+        pp = jax.lax.axis_index(pod_ax)  # both pod permutes must carry y
+        fwd = jax.lax.ppermute(
+            y, pod_ax, [((i + 1) % npod, i) for i in range(npod)])
+        acc = (Ap[pp, pp].astype(wt) * y.astype(wt)
                + Ap[jnp.mod(pp + 1, npod), pp].astype(wt)
-               * other.astype(wt))
+               * fwd.astype(wt))
         if npod > 2:
-            other2 = jax.lax.ppermute(
-                acc.astype(x.dtype), pod_ax,
-                [((i - 1) % npod, i) for i in range(npod)])
+            bwd = jax.lax.ppermute(
+                y, pod_ax, [((i - 1) % npod, i) for i in range(npod)])
             acc = acc + Ap[jnp.mod(pp - 1, npod), pp].astype(wt) \
-                * other2.astype(wt)
+                * bwd.astype(wt)
         return acc.astype(x.dtype)
 
-    def combine_fn(noisy_psi):
-        return jax.tree.map(_combine_leaf, noisy_psi)
+    def combine_fn(noisy_psi, Aj):
+        return jax.tree.map(lambda x: _combine_leaf(x, Aj), noisy_psi)
 
-    return _shard_map(combine_fn, mesh=mesh, in_specs=(specs,),
+    return _shard_map(combine_fn, mesh=mesh, in_specs=(specs, P()),
                          out_specs=specs)
 
 
@@ -240,14 +248,31 @@ def make_combination_matrix(mesh, gfl: GFLConfig) -> np.ndarray:
     A_pod (x) A_data so sparse combine factorizes over the two axes."""
     saxes = server_axes(mesh)
     if len(saxes) == 1:
-        return combination_matrix(gfl.topology, mesh.shape[saxes[0]])
+        return combination_matrix(gfl.topology, mesh.shape[saxes[0]],
+                                  rows=gfl.torus_rows, seed=gfl.topology_seed)
     npod = mesh.shape[saxes[0]]
     nd = mesh.shape[saxes[1]]
     Ad = combination_matrix(gfl.topology if gfl.topology != "torus" else "ring",
-                            nd)
+                            nd, seed=gfl.topology_seed)
     Ap = np.full((npod, npod), 1.0 / npod) if npod <= 2 \
         else combination_matrix("ring", npod)
     return np.kron(Ap, Ad)
+
+
+def make_topology_process(mesh, gfl: GFLConfig):
+    """The mesh run's fault process: per-round effective A_i + client
+    participation masks over the mesh's base graph (product graph on
+    multi-pod meshes).  Feed its realizations to the train step:
+
+        proc = make_topology_process(mesh, gfl_cfg)
+        real = proc.realize(step_idx)
+        alive = (proc.client_alive(step_idx, L)
+                 if proc.fault.client_dropout > 0 else None)
+        state, metrics = step(state, batch, real.A, alive)
+    """
+    from repro.core.resilience import TopologyProcess
+    return TopologyProcess(make_combination_matrix(mesh, gfl), gfl.fault,
+                           seed=gfl.topology_seed)
 
 
 # ---------------------------------------------------------------------------
@@ -261,34 +286,74 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
     """Build the jit-able GFL train step.
 
     params leaves: [P_servers, ...]; batch leaves: [P_servers, L, b, ...].
-    Returns (state, batch) -> (state, metrics).
+    Returns (state, batch[, A, client_alive]) -> (state, metrics).
+
+    The two trailing arguments are the resilience hooks (both optional;
+    defaults reproduce the static path exactly): ``A`` overrides the base
+    combination matrix with a per-round effective matrix from
+    :func:`make_topology_process` (dead links become zero-weight entries /
+    permutes), and ``client_alive`` ([P, L] mask) applies mid-round client
+    dropout — the aggregate renormalizes over survivors, which is exactly
+    the dropout-safe secure-agg semantics since the mesh computes the
+    aggregate directly (masks cancel; see docs/resilience.md).
     """
+    from repro.core.resilience import parse_fault_spec
+    from repro.core.resilience.runtime import ensure_dropout_safe
+
     cfg = model.cfg
     A = make_combination_matrix(mesh, gfl)
     Pn = num_servers(mesh)
-    Aj = jnp.asarray(A)
+    Aj = jnp.asarray(A, jnp.float32)
+
+    fault = parse_fault_spec(gfl.fault)
+    if fault.straggler > 0:
+        raise ValueError(
+            "straggler faults are simulator-only for now (they need the "
+            "per-server psi cache of repro.core.resilience.runtime); mesh "
+            "fault specs support links/outage/dropout components")
+    if (fault.perturbs_topology and gfl.combine_impl == "sparse"
+            and len(server_axes(mesh)) > 1):
+        raise ValueError(
+            "sparse combine on a multi-pod mesh derives its product-graph "
+            "weights statically and cannot apply per-round link faults; "
+            "use combine_impl='rotate' (or 'dense') with fault specs")
 
     acc_dtype = jnp.dtype(gfl.grad_acc_dtype)
 
-    def client_mean_grads(w_p, batch_p):
-        """(6)+(7): scan over L clients; per-client clip to B; mean."""
-        def body(acc, client_batch):
+    def client_mean_grads(w_p, batch_p, alive_p=None):
+        """(6)+(7): scan over L clients; per-client clip to B; mean.
+
+        ``alive_p`` ([L] 0/1, optional): dropped clients contribute nothing
+        and the mean renormalizes over the survivor count."""
+        def body(acc, xs):
+            client_batch, a = xs if alive_p is not None else (xs, None)
             (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(
                 w_p, client_batch, remat_policy=remat_policy)
             if gfl.grad_bound > 0:
                 grads, _ = clip_by_global_norm(grads, gfl.grad_bound)
-            acc = jax.tree.map(
-                lambda a, g: a + g.astype(acc_dtype), acc, grads)
+            if a is None:
+                acc = jax.tree.map(
+                    lambda c, g: c + g.astype(acc_dtype), acc, grads)
+            else:
+                acc = jax.tree.map(
+                    lambda c, g: c + g.astype(acc_dtype) * a.astype(acc_dtype),
+                    acc, grads)
+                loss = loss * a
             return acc, loss
 
         zeros = jax.tree.map(
             lambda p: jnp.zeros(p.shape, acc_dtype), w_p)
-        acc, losses = jax.lax.scan(body, zeros, batch_p)
-        L = jax.tree_util.tree_leaves(batch_p)[0].shape[0]
-        mean_g = jax.tree.map(lambda a: (a / L).astype(jnp.float32), acc)
-        return mean_g, losses.mean()
+        xs = batch_p if alive_p is None else (batch_p, alive_p)
+        acc, losses = jax.lax.scan(body, zeros, xs)
+        if alive_p is None:
+            L = jax.tree_util.tree_leaves(batch_p)[0].shape[0]
+            mean_g = jax.tree.map(lambda c: (c / L).astype(jnp.float32), acc)
+            return mean_g, losses.mean()
+        n = jnp.maximum(alive_p.sum(), 1.0).astype(acc_dtype)
+        mean_g = jax.tree.map(lambda c: (c / n).astype(jnp.float32), acc)
+        return mean_g, losses.sum() / n.astype(losses.dtype)
 
-    def client_parallel_grads(params, batch):
+    def client_parallel_grads(params, batch, alive=None):
         """Small-model mode (§Perf hillclimb 3): ALL (server, client) grads
         computed concurrently — the L client dim is sharded over the
         "model" axis (params are replicated over it), turning the idle TP
@@ -318,22 +383,43 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
             grads = jax.tree.map(
                 lambda g: (g * coef.reshape(coef.shape + (1,) * (g.ndim - 2))
                            .astype(g.dtype)), grads)
+        if alive is None:
+            mean_g = jax.tree.map(
+                lambda g: jnp.mean(g.astype(jnp.float32), axis=1), grads)
+            return mean_g, losses.mean(axis=1)
+        w = alive.astype(jnp.float32)                         # [P, L]
+        n = jnp.maximum(w.sum(axis=1), 1.0)                   # [P]
         mean_g = jax.tree.map(
-            lambda g: jnp.mean(g.astype(jnp.float32), axis=1), grads)
-        return mean_g, losses.mean(axis=1)
+            lambda g: (g.astype(jnp.float32)
+                       * w.reshape(w.shape + (1,) * (g.ndim - 2))
+                       ).sum(axis=1) / n.reshape((-1,) + (1,) * (g.ndim - 2)),
+            grads)
+        return mean_g, (losses * w).sum(axis=1) / n
 
     mech = mechanism_for(gfl)
     profile = mech.noise_profile()
+    if fault.client_dropout > 0:
+        ensure_dropout_safe(profile, where="mesh client dropout")
 
-    def step_fn(state: TrainState, batch):
+    def step_fn(state: TrainState, batch, A_round=None, client_alive=None):
         key, k_noise, k_client = jax.random.split(state.key, 3)
         ctx = RoundContext(step=state.step)
+        A_rt = Aj if A_round is None else jnp.asarray(A_round, jnp.float32)
+        # the survivor-weighted mean is a DIFFERENT XLA program (different
+        # fusion, ~1-ulp drift), so it is only traced in when the fault
+        # model can actually drop clients — this keeps the zero-probability
+        # resilience path bit-identical to the static path
+        alive = (None if client_alive is None or fault.client_dropout == 0
+                 else jnp.asarray(client_alive, jnp.float32))
 
         # (6)+(7) per server, vmapped over the sharded server dim
         if gfl.client_parallel:
-            mean_g, loss = client_parallel_grads(state.params, batch)
-        else:
+            mean_g, loss = client_parallel_grads(state.params, batch, alive)
+        elif alive is None:
             mean_g, loss = jax.vmap(client_mean_grads)(state.params, batch)
+        else:
+            mean_g, loss = jax.vmap(client_mean_grads)(state.params, batch,
+                                                       alive)
         psi = jax.tree.map(
             lambda w, g: (w.astype(jnp.float32)
                           - gfl.mu * g).astype(w.dtype),
@@ -341,10 +427,14 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
 
         # client-level residual noise (mechanisms whose masks cancel
         # exactly return None; iid returns the variance-equivalent draw —
-        # the O(mu^{-1}) term of Theorem 1)
+        # the O(mu^{-1}) term of Theorem 1).  Under dropout each server's
+        # draw scales with ITS realized survivor count ([P] vector),
+        # keeping the per-server 1/sqrt(L'_p) variance equivalence honest.
         if profile.client_sigma > 0:
             L = jax.tree_util.tree_leaves(batch)[0].shape[1]
-            cg = mech.client_noise_tree(k_client, psi, L, ctx)
+            L_eff = (L if alive is None
+                     else jnp.maximum(alive.sum(axis=1), 1.0))
+            cg = mech.client_noise_tree(k_client, psi, L_eff, ctx)
             if cg is not None:
                 psi = jax.tree.map(lambda x, n: x + n, psi, cg)
 
@@ -354,17 +444,17 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
         cancel = profile.server_cancels_exactly
 
         if gfl.combine_impl == "dense":
-            new_params = _dense_combine(Aj, psi, g, cancel=cancel)
+            new_params = _dense_combine(A_rt, psi, g, cancel=cancel)
         else:
             maker = (_make_sparse_combine if gfl.combine_impl == "sparse"
                      else _make_shardmap_combine)
-            combine = maker(mesh, cfg, gfl, A, state.params)
+            combine = maker(mesh, cfg, gfl, state.params)
             if g is not None:
                 # the rotating buffer carries (psi_m + g_m) exactly as the
                 # wire protocol does; cancelling mechanisms subtract their
                 # own g_p afterwards (eq. 24)
                 noisy = jax.tree.map(lambda x, n: x + n, psi, g)
-                mixed = combine(noisy)
+                mixed = combine(noisy, A_rt)
                 if cancel:
                     new_params = jax.tree.map(
                         lambda m, n: (m.astype(jnp.float32)
@@ -373,7 +463,7 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
                 else:
                     new_params = mixed
             else:
-                new_params = combine(psi)
+                new_params = combine(psi, A_rt)
 
         metrics = {"loss": loss.mean(), "step": state.step}
         return TrainState(new_params, state.step + 1, key), metrics

@@ -53,6 +53,9 @@ def main(argv=None):
     ap.add_argument("--mu", type=float, default=0.1)
     ap.add_argument("--combine", default="sparse",
                     choices=["sparse", "rotate", "dense"])
+    ap.add_argument("--fault", default="none",
+                    help="resilience fault spec (docs/resilience.md), e.g. "
+                         "links:0.1+dropout:0.2")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args(argv)
 
@@ -72,12 +75,14 @@ def main(argv=None):
 
     gfl_cfg = GFLConfig(topology="ring", privacy=args.privacy,
                         sigma_g=args.sigma, mu=args.mu, grad_bound=10.0,
-                        combine_impl=args.combine)
+                        combine_impl=args.combine, fault=args.fault)
     # mechanism-aware: the noise profile picks the curve (eps is inf for
     # a zero-noise config — the honest Theorem-2 answer)
     acc = mechanism_for(gfl_cfg).accountant()
     stream = TokenStream(vocab=cfg.vocab_size, seed=0)
 
+    process = (steps_lib.make_topology_process(mesh, gfl_cfg)
+               if gfl_cfg.fault != "none" else None)
     with mesh:
         step = jax.jit(steps_lib.make_train_step(model, gfl_cfg, mesh))
         state = steps_lib.init_train_state(model, gfl_cfg, mesh,
@@ -87,7 +92,15 @@ def main(argv=None):
             batch = federated_token_batches(
                 stream, seed=0, step=i, P=Pn, L=args.clients,
                 per_client=args.per_client, seq_len=args.seq)
-            state, metrics = step(state, batch)
+            if process is not None:
+                real = process.realize(i)
+                alive = (process.client_alive(i, args.clients)
+                         if process.fault.client_dropout > 0 else None)
+                state, metrics = step(state, batch, real.A, alive)
+                if real.gap != 0.0 and i % max(args.steps // 10, 1) == 0:
+                    print(f"  round {i}: spectral gap {real.gap:.3f}")
+            else:
+                state, metrics = step(state, batch)
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
                 eps = acc.advance(max(args.steps // 10, 1))
                 print(f"step {i:4d} loss {float(metrics['loss']):.4f} "

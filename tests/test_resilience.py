@@ -1,0 +1,490 @@
+"""Resilience runtime: fault specs, time-varying topologies (Assumption 1
+per realized round), dropout-safe secure aggregation, straggler staleness,
+and the fault=none bit-identity regression on all combine impls."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs.base import GFLConfig
+from repro.core import gfl
+from repro.core.privacy.mechanism import NoiseProfile, mechanism_for
+from repro.core.privacy.secure_agg import (
+    masked_client_mean_dropout_vec,
+    masked_client_mean_with_dropout,
+    pairwise_masks,
+    pairwise_masks_vec,
+)
+from repro.core.resilience import (
+    FaultModel,
+    TopologyProcess,
+    ensure_dropout_safe,
+    fold_dropped_links,
+    init_resilient_state,
+    make_resilient_gfl_step,
+    parse_fault_spec,
+)
+from repro.core.simulate import generate_problem, make_grad_fn, run_gfl, \
+    sample_round_batches
+from repro.core.topology import (
+    combination_matrix,
+    spectral_gap,
+    validate_combination_matrix,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return generate_problem(jax.random.PRNGKey(0), P=5, K=8, N=30, M=2)
+
+
+# ------------------------------------------------------------ fault specs --
+
+
+def test_fault_spec_round_trip():
+    spec = "links:0.1+outage:0.02+straggler:0.2,stale=3+dropout:0.25"
+    f = parse_fault_spec(spec)
+    assert f == FaultModel(link_drop=0.1, outage=0.02, straggler=0.2,
+                           staleness=3, client_dropout=0.25)
+    assert parse_fault_spec(f.to_spec()) == f
+    assert parse_fault_spec("none").is_null
+    assert parse_fault_spec("links:0.0+dropout:0").is_null
+    assert FaultModel().to_spec() == "none"
+
+
+@pytest.mark.parametrize("bad", [
+    "links", "links:xyz", "frobnicate:0.1", "links:0.1+links:0.2",
+    "links:1.5", "dropout:-0.1", "straggler:0.1,wat=3",
+    "straggler:0.1,stale=0",
+])
+def test_fault_spec_rejects_garbage(bad):
+    with pytest.raises(ValueError):
+        parse_fault_spec(bad)
+
+
+# ------------------------------------------- realized-A_i invariants ------
+
+FAMILIES = ("ring", "torus", "full", "erdos", "hypercube", "expander")
+
+
+def _family_P(topology, P):
+    if topology == "hypercube":           # needs a power of two
+        return 1 << max(P.bit_length() - 1, 2)
+    return P
+
+
+@pytest.mark.parametrize("topology", FAMILIES)
+@pytest.mark.parametrize("spec", ["links:0.3", "outage:0.2",
+                                  "links:0.5+outage:0.2"])
+def test_realized_rounds_satisfy_assumption1(topology, spec):
+    P = _family_P(topology, 12)
+    proc = TopologyProcess(combination_matrix(topology, P, seed=3), spec,
+                           seed=1, validate=False)
+    for i in range(25):
+        r = proc.realize(i)
+        A = r.A
+        assert np.allclose(A, A.T), (topology, i)
+        assert np.allclose(A.sum(0), 1.0), (topology, i)
+        assert np.allclose(A.sum(1), 1.0), (topology, i)
+        assert (A >= 0).all(), (topology, i)
+        assert spectral_gap(A) < 1.0, (topology, i)
+        # the validator agrees with the by-hand checks
+        validate_combination_matrix(A)
+
+
+@given(topology=st.sampled_from(FAMILIES), P=st.integers(4, 20),
+       drop=st.floats(0.0, 0.7), outage=st.floats(0.0, 0.4),
+       round_idx=st.integers(0, 500), seed=st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_realized_A_property(topology, P, drop, outage, round_idx, seed):
+    """Every fault-realized A_i over every family satisfies Assumption 1."""
+    P = _family_P(topology, P)
+    fault = FaultModel(link_drop=drop, outage=outage)
+    proc = TopologyProcess(combination_matrix(topology, P, seed=seed),
+                           fault, seed=seed, validate=False)
+    A = proc.realize(round_idx).A
+    validate_combination_matrix(A)   # symmetric + doubly stochastic + gap<1
+    assert spectral_gap(A) < 1.0
+
+
+def test_fold_dropped_links_exact():
+    A = combination_matrix("torus", 9)
+    full_mask = ~np.eye(9, dtype=bool)
+    # all-alive fold is a bit-exact no-op
+    assert np.array_equal(fold_dropped_links(A, full_mask), A)
+    # dropping one edge moves its weight onto both diagonals, exactly
+    j, k = map(int, np.argwhere(np.triu(A, 1) > 0)[0])
+    mask = full_mask.copy()
+    mask[j, k] = mask[k, j] = False
+    Ad = fold_dropped_links(A, mask)
+    assert Ad[j, k] == 0.0 and Ad[k, j] == 0.0
+    assert Ad[j, j] == A[j, j] + A[j, k]
+    assert Ad[k, k] == A[k, k] + A[k, j]
+    validate_combination_matrix(Ad)
+
+
+def test_process_is_deterministic_and_null_is_base():
+    A = combination_matrix("ring", 8)
+    proc = TopologyProcess(A, "links:0.4", seed=5)
+    r1, r2 = proc.realize(7), proc.realize(7)
+    assert np.array_equal(r1.A, r2.A)
+    assert np.array_equal(r1.link_mask, r2.link_mask)
+    # different rounds realize different topologies (p=0.4 on 8 edges)
+    assert any(not np.array_equal(proc.realize(i).A, proc.realize(i + 1).A)
+               for i in range(10))
+    null = TopologyProcess(A, "links:0.0+dropout:0.0")
+    assert null.static
+    assert np.array_equal(null.realize(3).A, np.asarray(A))
+
+
+def test_gap_trajectory_degrades_with_drop_probability():
+    A = combination_matrix("hypercube", 16)
+    base = spectral_gap(A)
+    proc = TopologyProcess(A, "links:0.3", seed=0)
+    gaps = proc.gap_trajectory(20)
+    assert gaps.shape == (20,)
+    assert (gaps < 1.0).all()
+    assert gaps.mean() > base   # failures slow mixing, never break it
+
+
+def test_client_alive_always_has_a_survivor():
+    proc = TopologyProcess(combination_matrix("ring", 6), "dropout:0.95",
+                           seed=2)
+    for i in range(30):
+        alive = proc.client_alive(i, 4)
+        assert alive.shape == (6, 4)
+        assert alive.any(axis=1).all()
+    # deterministic too
+    assert np.array_equal(proc.client_alive(3, 4), proc.client_alive(3, 4))
+
+
+# ------------------------------------ dropout-safe secure aggregation -----
+
+
+def test_dropout_vec_matches_loop_reference_and_exact_mean():
+    key = jax.random.PRNGKey(3)
+    upd = jax.random.normal(jax.random.fold_in(key, 1), (6, 16))
+    alive = jnp.asarray([True, False, True, True, False, True])
+    vec = masked_client_mean_dropout_vec(upd, key, alive, mask_scale=4.0)
+    loop = masked_client_mean_with_dropout(upd, key, alive, mask_scale=4.0)
+    np.testing.assert_allclose(np.asarray(vec), np.asarray(loop), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(vec),
+                               np.asarray(upd[alive].mean(0)), atol=1e-4)
+
+
+@given(L=st.integers(2, 8), seed=st.integers(0, 999),
+       drop_mask=st.integers(1, 200))
+@settings(max_examples=20, deadline=None)
+def test_dropout_vec_recovery_property(L, seed, drop_mask):
+    """Vectorized survivor renormalization recovers the exact alive mean
+    for every dropout set (the production path of the loop reference)."""
+    key = jax.random.PRNGKey(seed)
+    upd = jax.random.normal(jax.random.fold_in(key, 1), (L, 24))
+    alive = jnp.asarray([(drop_mask >> i) & 1 for i in range(L)], bool)
+    alive = alive.at[0].set(True)
+    agg = masked_client_mean_dropout_vec(upd, key, alive, mask_scale=4.0)
+    np.testing.assert_allclose(np.asarray(agg),
+                               np.asarray(upd[alive].mean(0)), atol=1e-4)
+
+
+@given(L=st.integers(2, 10), seed=st.integers(0, 999))
+@settings(max_examples=15, deadline=None)
+def test_pairwise_masks_loop_vs_vec(L, seed):
+    """The O(L^2) python-loop masks are the REFERENCE; the vectorized
+    version must reproduce them (same PRG streams, float addition order)."""
+    key = jax.random.PRNGKey(seed)
+    ref = pairwise_masks(key, L, 12, 3.0)
+    vec = pairwise_masks_vec(key, L, 12, 3.0)
+    np.testing.assert_allclose(np.asarray(vec), np.asarray(ref), atol=1e-4)
+
+
+def test_pairwise_masks_loop_vs_vec_deterministic():
+    key = jax.random.PRNGKey(0)
+    np.testing.assert_allclose(np.asarray(pairwise_masks_vec(key, 7, 9, 2.0)),
+                               np.asarray(pairwise_masks(key, 7, 9, 2.0)),
+                               atol=1e-4)
+
+
+def test_mechanism_masked_hooks_exact_under_dropout(problem):
+    """Every dropout-safe mechanism's client_protect_masked recovers the
+    survivor mean (hybrid-family masks cancel; iid noise averages out only
+    in expectation, so it is checked at sigma=0)."""
+    for scheme in ("none", "hybrid", "gaussian_dp", "scheduled", "iid_dp"):
+        cfg = GFLConfig(num_servers=5, clients_per_server=8, privacy=scheme,
+                        sigma_g=0.0 if scheme == "iid_dp" else 3.0,
+                        mu=0.1, epsilon_target=0.0)
+        mech = mechanism_for(cfg)
+        assert mech.noise_profile().client_dropout_safe, scheme
+        key = jax.random.PRNGKey(1)
+        upd = jax.random.normal(jax.random.fold_in(key, 2), (5, 7))
+        alive = jnp.asarray([True, True, False, True, False])
+        out = mech.client_protect_masked(upd, key, alive)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(upd[alive].mean(0)),
+                                   atol=1e-4, err_msg=scheme)
+
+
+def test_ensure_dropout_safe_requires_declaration():
+    """ANY undeclared profile is refused: cancelling mechanisms would leave
+    orphaned masks, and noisy non-cancelling mechanisms without a
+    client_protect_masked override would silently fall back to the
+    noise-free base survivor mean."""
+    unsafe_cancelling = NoiseProfile(
+        distribution="laplace", client_sigma=1.0, server_sigma=1.0,
+        client_cancels_exactly=True, server_cancels_exactly=True,
+        client_dropout_safe=False)
+    with pytest.raises(ValueError, match="client_dropout_safe"):
+        ensure_dropout_safe(unsafe_cancelling)
+    with pytest.raises(ValueError, match="client_dropout_safe"):
+        ensure_dropout_safe(NoiseProfile("laplace", 1.0, 1.0, False, False))
+    # declared-safe profiles pass
+    ensure_dropout_safe(NoiseProfile("laplace", 1.0, 1.0, True, True,
+                                     client_dropout_safe=True))
+
+
+def test_client_noise_tree_per_server_survivor_scaling():
+    """Under dropout each server's variance-equivalent draw scales with
+    ITS survivor count, not the fleet average."""
+    cfg = GFLConfig(num_servers=2, clients_per_server=8, privacy="iid_dp",
+                    sigma_g=1.0, mu=0.1)
+    mech = mechanism_for(cfg)
+    tree = {"w": jnp.zeros((2, 40_000))}
+    n_p = jnp.asarray([1.0, 16.0])           # heterogeneous survivors
+    out = np.asarray(mech.client_noise_tree(jax.random.PRNGKey(0), tree,
+                                            n_p)["w"])
+    assert out[0].std() == pytest.approx(1.0, rel=0.05)
+    assert out[1].std() == pytest.approx(0.25, rel=0.05)
+
+
+# --------------------------------------------------- resilient execution --
+
+
+def _cfg(fault, scheme="hybrid", **kw):
+    base = dict(num_servers=5, clients_per_server=8, clients_sampled=4,
+                privacy=scheme, sigma_g=0.3, mu=0.1, topology="ring",
+                grad_bound=10.0, fault=fault)
+    base.update(kw)
+    return GFLConfig(**base)
+
+
+@pytest.mark.parametrize("scheme", ["hybrid", "iid_dp", "none"])
+def test_fault_none_bit_identical_to_static(problem, scheme):
+    """Regression: a zero-probability fault spec routes through the full
+    resilience runtime (traced per-round A_i) yet reproduces the static
+    path BIT-FOR-BIT."""
+    kw = dict(iters=8, batch_size=5, seed=11)
+    msd_s, p_s = run_gfl(problem, _cfg("none", scheme), **kw)
+    msd_r, p_r = run_gfl(problem, _cfg("links:0.0+dropout:0.0", scheme), **kw)
+    assert np.array_equal(np.asarray(p_s), np.asarray(p_r))
+    assert msd_s.tolist() == msd_r.tolist()
+
+
+def test_fault_none_bit_identical_with_combine_every(problem):
+    kw = dict(iters=6, batch_size=5, seed=4)
+    msd_s, p_s = run_gfl(problem, _cfg("none", combine_every=2), **kw)
+    msd_r, p_r = run_gfl(problem, _cfg("links:0.0", combine_every=2), **kw)
+    assert np.array_equal(np.asarray(p_s), np.asarray(p_r))
+    assert msd_s.tolist() == msd_r.tolist()
+
+
+def test_faulted_run_converges_and_records_gaps(problem):
+    cfg = _cfg("links:0.2+outage:0.1+straggler:0.3,stale=2+dropout:0.3")
+    msd, params, gaps = run_gfl(problem, cfg, iters=40, batch_size=5,
+                                seed=1, record_gaps=True)
+    assert np.isfinite(msd).all()
+    assert msd[-1] < msd[0]
+    assert gaps.shape == (40,) and (gaps < 1.0).all()
+
+
+def test_straggler_staleness_bound(problem):
+    """With straggler prob 1 and stale=2, ages cycle 1, 2, 0 (forced
+    refresh at the bound) and params only move on refresh rounds."""
+    cfg = _cfg("straggler:1.0,stale=2", scheme="none")
+    A = combination_matrix("ring", 5)
+    proc = TopologyProcess(A, cfg.fault, seed=0)
+    step = make_resilient_gfl_step(proc, make_grad_fn(problem.rho), cfg)
+    state = init_resilient_state(jax.random.PRNGKey(0), 5, 2,
+                                 init_scale=0.5)
+    batch = sample_round_batches(jax.random.PRNGKey(5), problem, 4, 5)
+    ages, moved = [], []
+    for _ in range(6):
+        prev_psi = np.asarray(state.psi_cache)
+        state = step(state, batch)
+        ages.append(np.asarray(state.psi_age).tolist())
+        moved.append(not np.array_equal(prev_psi,
+                                        np.asarray(state.psi_cache)))
+    assert ages == [[1] * 5, [2] * 5, [0] * 5] * 2
+    # psi only refreshes when the staleness bound forces it
+    assert moved == [False, False, True] * 2
+
+
+def test_gfl_round_accepts_topology_process(problem):
+    cfg = _cfg("links:0.3+dropout:0.4")
+    proc = TopologyProcess(combination_matrix("ring", 5), cfg.fault, seed=3)
+    grad_fn = make_grad_fn(problem.rho)
+    key = jax.random.PRNGKey(7)
+    params = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (5, 2))
+    batch = sample_round_batches(jax.random.fold_in(key, 2), problem, 4, 5)
+    out = gfl.gfl_round(params, batch, jax.random.fold_in(key, 3), A=proc,
+                        grad_fn=grad_fn, cfg=cfg, step=2)
+    assert out.shape == (5, 2)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_dropout_faults_refused_for_unsafe_mechanism(problem):
+    """A mechanism declaring exact client cancellation WITHOUT dropout
+    safety must be rejected by the resilience runtime."""
+    from repro.core.privacy.mechanism import (
+        PrivacyMechanism,
+        _REGISTRY,
+        register_mechanism,
+    )
+
+    name = "_test_unsafe_masks"
+    if name not in _REGISTRY:
+        @register_mechanism(name)
+        class UnsafeMasks(PrivacyMechanism):
+            def noise_profile(self):
+                return NoiseProfile(distribution="laplace", client_sigma=1.0,
+                                    server_sigma=0.0,
+                                    client_cancels_exactly=True,
+                                    server_cancels_exactly=True,
+                                    client_dropout_safe=False)
+
+    cfg = _cfg("dropout:0.3", scheme=name)
+    proc = TopologyProcess(combination_matrix("ring", 5), cfg.fault)
+    with pytest.raises(ValueError, match="client_dropout_safe"):
+        make_resilient_gfl_step(proc, make_grad_fn(problem.rho), cfg)
+    # without the dropout component the same mechanism is fine
+    make_resilient_gfl_step(
+        TopologyProcess(combination_matrix("ring", 5), "links:0.2"),
+        make_grad_fn(problem.rho), _cfg("links:0.2", scheme=name))
+
+
+def test_mesh_train_step_guards():
+    """make_train_step rejects simulator-only straggler specs up front."""
+    pytest.importorskip("jax")
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch import steps as S
+    from repro.models import Model
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    model = Model(get_config("smollm-135m").reduced())
+    with pytest.raises(ValueError, match="straggler"):
+        S.make_train_step(model, GFLConfig(fault="straggler:0.2"), mesh)
+
+
+@pytest.mark.slow
+def test_multipod_sparse_combine_matches_dense():
+    """3-pod product-graph sparse combine == dense kron(A_pod, A_data)
+    combine.  Regression for two sparse-path bugs: the pod-ring backward
+    permute must carry the data-mixed value (not the partial pod mix), and
+    a 2-ring data axis must not double-count its single neighbour."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import GFLConfig
+        from repro.configs.registry import get_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch import steps as S
+        from repro.models import Model
+        from repro.data import TokenStream, federated_token_batches
+
+        mesh = make_test_mesh((3, 2, 1), ("pod", "data", "model"))
+        cfg = get_config("smollm-135m").reduced()
+        model = Model(cfg)
+        stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+        batch = federated_token_batches(stream, 0, 0, P=6, L=2,
+                                        per_client=2, seq_len=32)
+        outs = {}
+        for impl in ("dense", "sparse"):
+            gfl = GFLConfig(topology="ring", privacy="none", mu=0.05,
+                            grad_bound=10.0, combine_impl=impl)
+            with mesh:
+                step = jax.jit(S.make_train_step(model, gfl, mesh))
+                state = S.init_train_state(model, gfl, mesh,
+                                           jax.random.PRNGKey(0))
+                state, _ = step(state, batch)
+                outs[impl] = jax.device_get(state.params)
+        for (pa, la), (pb, lb) in zip(
+                jax.tree_util.tree_leaves_with_path(outs["dense"]),
+                jax.tree_util.tree_leaves_with_path(outs["sparse"])):
+            np.testing.assert_allclose(
+                np.asarray(la, np.float32), np.asarray(lb, np.float32),
+                atol=1e-5, err_msg=str(pa))
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "OK" in out.stdout
+
+
+# ------------------------------------------------- mesh bit-identity ------
+
+
+@pytest.mark.slow
+def test_mesh_fault_none_bit_identical_all_combine_impls():
+    """fault=none resilience inputs (explicit base A + all-alive mask)
+    reproduce the static mesh path bit-for-bit on dense/rotate/sparse."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import GFLConfig
+        from repro.configs.registry import get_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch import steps as S
+        from repro.models import Model
+        from repro.data import TokenStream, federated_token_batches
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        cfg = get_config("smollm-135m").reduced()
+        model = Model(cfg)
+        stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+        batch = federated_token_batches(stream, 0, 0, P=2, L=2,
+                                        per_client=2, seq_len=32)
+        for impl in ("dense", "rotate", "sparse"):
+            kw = dict(topology="ring", privacy="hybrid", sigma_g=0.1,
+                      grad_bound=10.0, mu=0.05, combine_impl=impl)
+            with mesh:
+                g0 = GFLConfig(**kw)
+                step0 = jax.jit(S.make_train_step(model, g0, mesh))
+                s0 = S.init_train_state(model, g0, mesh,
+                                        jax.random.PRNGKey(0))
+                g1 = GFLConfig(fault="links:0.0+dropout:0.0", **kw)
+                step1 = jax.jit(S.make_train_step(model, g1, mesh))
+                proc = S.make_topology_process(mesh, g1)
+                s1 = S.init_train_state(model, g1, mesh,
+                                        jax.random.PRNGKey(0))
+                for i in range(2):
+                    s0, _ = step0(s0, batch)
+                    real = proc.realize(i)
+                    s1, _ = step1(s1, batch, real.A,
+                                  proc.client_alive(i, 2))
+                same = all(bool(jnp.array_equal(a, b)) for a, b in
+                           zip(jax.tree.leaves(s0.params),
+                               jax.tree.leaves(s1.params)))
+                assert same, impl
+                print(impl, "bit-identical")
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "OK" in out.stdout

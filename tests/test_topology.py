@@ -15,7 +15,8 @@ from repro.core.topology import (
 )
 
 
-@pytest.mark.parametrize("topology", ["ring", "torus", "full", "erdos"])
+@pytest.mark.parametrize("topology", ["ring", "torus", "full", "erdos",
+                                      "expander"])
 @pytest.mark.parametrize("P", [4, 10, 16])
 def test_assumption1(topology, P):
     A = combination_matrix(topology, P)
@@ -23,6 +24,46 @@ def test_assumption1(topology, P):
     assert np.allclose(A.sum(0), 1.0)
     assert np.allclose(A.sum(1), 1.0)
     assert (A >= 0).all()
+    assert spectral_gap(A) < 1.0
+
+
+@pytest.mark.parametrize("P", [4, 8, 16])
+def test_assumption1_hypercube(P):
+    A = combination_matrix("hypercube", P)
+    validate_combination_matrix(A)
+    assert spectral_gap(A) < 1.0
+
+
+@given(topology=st.sampled_from(["ring", "torus", "full", "erdos",
+                                 "expander", "hypercube"]),
+       P=st.integers(3, 24), seed=st.integers(0, 50))
+@settings(max_examples=40, deadline=None)
+def test_every_family_satisfies_assumption1(topology, P, seed):
+    """Property: EVERY graph family (including hypercube and expander)
+    yields a symmetric, doubly-stochastic matrix with spectral gap < 1."""
+    if topology == "hypercube":
+        P = 1 << max(P.bit_length() - 1, 2)   # nearest power of two
+    A = combination_matrix(topology, P, seed=seed)
+    assert np.allclose(A, A.T)
+    assert np.allclose(A.sum(0), 1.0)
+    assert np.allclose(A.sum(1), 1.0)
+    assert (A >= 0).all()
+    assert spectral_gap(A) < 1.0
+    validate_combination_matrix(A)
+
+
+@given(P=st.integers(4, 16), drop=st.floats(0.0, 0.6),
+       round_idx=st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_fault_realized_matrices_satisfy_assumption1(P, drop, round_idx):
+    """Property: per-round fault realizations keep Assumption 1 (the
+    resilience subsystem's core contract; see also test_resilience)."""
+    from repro.core.resilience import TopologyProcess
+
+    proc = TopologyProcess(combination_matrix("torus", P),
+                           f"links:{drop}", seed=1, validate=False)
+    A = proc.realize(round_idx).A
+    validate_combination_matrix(A)
     assert spectral_gap(A) < 1.0
 
 
