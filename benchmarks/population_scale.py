@@ -1,0 +1,164 @@
+"""Population-scale benchmark: virtual K sweep at fixed cohort size L.
+
+The point of the population engine (repro/core/population/) is that K is a
+*virtual* quantity: memory and compute scale with the sampled cohort
+[P, L], not the population [P, K].  This sweep makes that measurable — for
+K in {50, 1e3, 1e5} at fixed L it reports
+
+  * client-steps/sec (throughput of the whole-run lax.scan executor), and
+  * peak live device bytes (sampled per round on the streaming loop),
+
+and ASSERTS the bounded-memory claim at every K: peak live bytes stay
+below what one dense ``[P, K, N, M]`` float32 tensor alone would cost (the
+dense simulator materializes exactly that tensor before the first round),
+with a fixed small allowance so tiny-K rows — where the dense tensor is
+smaller than baseline jit scratch — remain checkable.
+
+    PYTHONPATH=src python benchmarks/population_scale.py            # full
+    PYTHONPATH=src python benchmarks/population_scale.py --reduced  # CI smoke
+
+Writes the repo-root ``BENCH_population.json`` (the first datapoint of the
+perf trajectory) and prints ``name,value`` rows for the harness
+(benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core.population import (
+    SyntheticPopulation,
+    estimate_w_ref,
+    run_gfl_population,
+)
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_population.json")
+
+VIRTUAL_KS = (50, 1_000, 100_000)
+_OVERHEAD_BYTES = 8 * 2**20   # runtime-buffer allowance for the tiny-K rows
+
+
+def live_bytes() -> int:
+    """Total bytes of live jax device buffers."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.live_arrays())
+
+
+def bench_one(K: int, *, P: int, L: int, N: int, iters: int,
+              batch_size: int, mem_rounds: int = 3) -> dict:
+    """Throughput (scan executor) + peak-memory (streaming loop) at one K."""
+    pop = SyntheticPopulation(P, K, mode="hetero", N=N, M=2, data_seed=0)
+    cfg = GFLConfig(num_servers=P, clients_per_server=K, clients_sampled=L,
+                    topology="ring", privacy="hybrid", sigma_g=0.2, mu=0.1,
+                    grad_bound=10.0)
+    dense_bytes = P * K * N * 2 * 4  # the [P, K, N, M] f32 the dense path holds
+
+    # memory: stream a few rounds by hand, sampling live bytes while the
+    # cohort batch and the state are both in flight (run_gfl_population
+    # frees its intermediates before returning, which would under-report)
+    import jax.numpy as jnp
+
+    from repro.core import gfl
+    from repro.core.population import uniform_cohort_batch
+    from repro.core.simulate import base_combination_matrix, make_grad_fn
+
+    step = gfl.make_gfl_step(
+        jnp.asarray(base_combination_matrix(cfg, P)), make_grad_fn(pop.rho),
+        cfg)
+    sample = jax.jit(
+        lambda k: uniform_cohort_batch(k, pop, min(L, K), batch_size))
+    key = jax.random.PRNGKey(0)
+    key, k_init = jax.random.split(key)
+    state = gfl.init_state(k_init, P, pop.dim)
+    peak = live_bytes()
+    for _ in range(mem_rounds):
+        key, kb = jax.random.split(key)
+        batch = sample(kb)
+        jax.block_until_ready(batch)
+        peak = max(peak, live_bytes())
+        state = step(state, batch)
+        jax.block_until_ready(state.params)
+        peak = max(peak, live_bytes())
+    del batch, state
+    # asserted at EVERY K: below the dense [P, K, N, M] tensor, with a
+    # fixed overhead allowance for runtime buffers so tiny-K rows (where
+    # the dense tensor is smaller than baseline jit scratch) stay checkable
+    budget = max(dense_bytes, _OVERHEAD_BYTES)
+    assert peak < budget, (
+        f"population engine peaked at {peak} live bytes for K={K} — "
+        f"above the {budget}-byte budget (dense [P, K, N, M] equivalent "
+        f"{dense_bytes}); it is supposed to never materialize the "
+        "population")
+
+    # throughput: reference minimizer solved OUTSIDE the timed region
+    # (run_gfl_population would otherwise Monte-Carlo one on first use),
+    # then one compile (warmup) + timed scan run
+    w_ref = estimate_w_ref(pop, sample_clients=8, iters=200)
+    run_gfl_population(pop, cfg, iters=2, batch_size=batch_size, seed=0,
+                       scan=True, w_ref=w_ref)
+    t0 = time.time()
+    res = run_gfl_population(pop, cfg, iters=iters, batch_size=batch_size,
+                             seed=0, scan=True, w_ref=w_ref)
+    jax.block_until_ready(res.params)
+    dt = time.time() - t0
+    return {
+        "virtual_K": K, "P": P, "L": L, "N": N, "iters": iters,
+        "batch_size": batch_size,
+        "client_steps_per_sec": P * L * iters / dt,
+        "seconds": dt,
+        "peak_live_bytes": int(peak),
+        "dense_equiv_bytes": int(dense_bytes),
+        "q": L / K,
+    }
+
+
+def run(quick: bool = False, reduced: bool = False, iters: int | None = None,
+        P: int = 8, L: int = 10, N: int = 100, batch_size: int = 10):
+    if quick or reduced:
+        P, L, N = 4, 5, 50
+        iters = 20 if iters is None else iters   # explicit --iters wins
+    iters = 100 if iters is None else iters
+    rows = [bench_one(K, P=P, L=min(L, K), N=N, iters=iters,
+                      batch_size=batch_size) for K in VIRTUAL_KS]
+
+    with open(OUT, "w") as f:
+        json.dump({"benchmark": "population_scale",
+                   "reduced": bool(quick or reduced),
+                   "rows": rows}, f, indent=2)
+        f.write("\n")
+
+    out = []
+    for r in rows:
+        tag = f"K{r['virtual_K']:.0e}".replace("e+0", "e")
+        out.append((f"population_scale/{tag}_client_steps_per_sec",
+                    r["client_steps_per_sec"]))
+        out.append((f"population_scale/{tag}_peak_live_mb",
+                    r["peak_live_bytes"] / 2**20))
+    # the headline scaling claim: going 50 -> 1e5 virtual clients must not
+    # blow up memory (dense would grow 2000x)
+    out.append(("population_scale/peak_mb_ratio_K1e5_vs_K50",
+                rows[-1]["peak_live_bytes"] / max(rows[0]["peak_live_bytes"],
+                                                  1)))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke: fewer iters, smaller P/L/N (virtual K "
+                         "sweep unchanged — that is the point)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="rounds per K (default: 100 full / 20 reduced)")
+    args = ap.parse_args(argv)
+    for name, val in run(iters=args.iters, reduced=args.reduced):
+        print(f"{name},{val:.6g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Population-scale demo: a virtual fleet of 100k clients per server.
+
+Walks the population engine end to end on a laptop CPU:
+
+  1. a LAZY synthetic population (no [P, K, N, M] tensor exists — every
+     client's shard is a pure function of (data_seed, server, client));
+  2. cohort scheduling under a diurnal availability trace, first uniform,
+     then gradient-norm importance sampling with unbiased 1/(K pi)
+     reweighting;
+  3. subsampling-amplified privacy accounting: the same hybrid mechanism,
+     but the ledger charged at the realized cohort rate q = L/K instead of
+     full participation — the epsilon gap is the amplification win.
+
+    PYTHONPATH=src python examples/population_demo.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core.population import estimate_w_ref, run_gfl_population
+from repro.core.privacy.mechanism import mechanism_for
+
+P, K, L, ITERS = 8, 100_000, 20, 120
+
+
+def main():
+    print(f"virtual population: P={P} servers x K={K:,} clients/server "
+          f"(={P * K:,} clients), cohort L={L} per round "
+          f"(q = {L / K:.0e})")
+
+    base = GFLConfig(num_servers=P, clients_per_server=K, clients_sampled=L,
+                     topology="hypercube", privacy="hybrid", sigma_g=0.2,
+                     mu=0.1, grad_bound=10.0,
+                     population="synthetic:hetero,lo=0.5,hi=1.5")
+
+    # reference minimizer: Monte-Carlo client subsample (the fleet itself
+    # is never materialized)
+    from repro.core.population import population_from_spec
+    pop = population_from_spec(base)
+    w_ref = estimate_w_ref(pop, sample_clients=64, iters=1500)
+    print(f"w_ref (MC over 64/{K:,} clients per server): "
+          f"{np.asarray(w_ref).round(3)}")
+
+    print(f"\n{'cohort spec':52s} {'MSD tail':>9s} {'q mean':>8s}")
+    from dataclasses import replace
+    for cohort in ("uniform",
+                   "uniform+trace:diurnal,period=24,min=0.2",
+                   "importance,floor=0.2+trace:diurnal,period=24,min=0.2"):
+        cfg = replace(base, cohort=cohort)
+        res = run_gfl_population(pop, cfg, iters=ITERS, batch_size=10,
+                                 seed=1, w_ref=w_ref)
+        tail = float(np.mean(res.msd[-12:]))
+        print(f"{cohort:52s} {tail:9.5f} {res.q.mean():8.2g}")
+
+    # amplification: same mechanisms, ledger charged at the realized q.
+    # Theorem 2's quadratic curve has huge per-release epsilons, where
+    # amplification only shaves ln(1/q) per release; the scheduled curve
+    # spends small uniform slices, where amplification is the full
+    # multiplicative q win — the regime arXiv:2301.06412 analyzes.
+    q = L / K
+    print(f"\nprivacy after {ITERS} rounds, full vs amplified (q={q:.0e}):")
+    acc = mechanism_for(base).accountant()
+    acc.advance(ITERS, q=q)
+    print(f"  hybrid / Theorem-2   eps {acc.epsilon():12.1f}   ->  "
+          f"eps_amp {acc.amplified_epsilon():12.4f}")
+    sched = replace(base, privacy="scheduled", epsilon_target=10.0,
+                    epsilon_horizon=ITERS)
+    acc_s = mechanism_for(sched).accountant()
+    acc_s.advance(ITERS, q=q)
+    print(f"  scheduled (eps<=10)  eps {acc_s.epsilon():12.1f}   ->  "
+          f"eps_amp {acc_s.amplified_epsilon():12.6f}")
+    print("each round only exposes the sampled cohort, so release j is "
+          "charged\nln(1 + q(e^eps_j - 1)) instead of eps_j "
+          "(docs/population.md).")
+
+
+if __name__ == "__main__":
+    main()

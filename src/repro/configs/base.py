@@ -211,6 +211,18 @@ class GFLConfig:
                                      # "links:0.1+dropout:0.2" — see
                                      # repro.core.resilience and
                                      # docs/resilience.md for the grammar
+    population: str = "dense"        # client-population spec: dense |
+                                     # synthetic:iid|hetero|mixture[,...] |
+                                     # dirichlet:<alpha>[,...] — see
+                                     # repro.core.population and
+                                     # docs/population.md for the grammar
+    cohort: str = "uniform"          # cohort-scheduler spec: uniform |
+                                     # importance[,floor=..] with optional
+                                     # "+trace:always|diurnal|devclass[,..]"
+                                     # — see docs/population.md
+    data_seed: int = 0               # seed of the lazy population generator
+                                     # (client k's shard is a pure function
+                                     # of (data_seed, server, client))
     privacy: str = "hybrid"          # registry key into
                                      # repro.core.privacy.mechanism: none |
                                      # iid_dp | hybrid | gaussian_dp |

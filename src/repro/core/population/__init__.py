@@ -1,0 +1,35 @@
+"""Population-scale client engine: lazy populations, cohort scheduling,
+streaming execution.  See docs/population.md."""
+from repro.core.population.cohort import (
+    AvailabilityTrace,
+    CohortScheduler,
+    CohortSelection,
+    parse_cohort_spec,
+    parse_trace_spec,
+)
+from repro.core.population.engine import (
+    PopulationRunResult,
+    as_population,
+    estimate_w_ref,
+    run_gfl_population,
+    uniform_cohort_batch,
+)
+from repro.core.population.population import (
+    ClientPopulation,
+    DensePopulation,
+    DirichletPopulation,
+    PopulationSpec,
+    SyntheticPopulation,
+    parse_population_spec,
+    population_from_spec,
+)
+
+__all__ = [
+    "AvailabilityTrace", "CohortScheduler", "CohortSelection",
+    "parse_cohort_spec", "parse_trace_spec",
+    "PopulationRunResult", "as_population", "estimate_w_ref",
+    "run_gfl_population", "uniform_cohort_batch",
+    "ClientPopulation", "DensePopulation", "DirichletPopulation",
+    "PopulationSpec", "SyntheticPopulation", "parse_population_spec",
+    "population_from_spec",
+]

@@ -1,0 +1,283 @@
+"""Cohort scheduling: who participates in round i, and at what rate.
+
+A :class:`CohortScheduler` draws each round's ``[P, L]`` cohort by
+composing three processes:
+
+  1. an **availability trace** — per-client availability probabilities
+     (diurnal phase patterns, device classes) realized deterministically in
+     ``(seed, round)`` exactly like the resilience runtime's fault draws;
+  2. the **sampler** — uniform, or the importance sampler of
+     :mod:`repro.core.sampling` (probabilities ~ running gradient-norm
+     estimates, sampled WITH replacement per [23] so the 1/(K pi)
+     reweighting stays unbiased);
+  3. **mid-round dropout** from the ``dropout:`` component of the
+     ``GFLConfig.fault`` spec (same stream constants as
+     ``TopologyProcess.client_alive``, so a scheduler and a topology
+     process given the same seed realize the same masks).
+
+The scheduler also reports the **realized sampling rate q** of every round
+— the quantity subsampling amplification is accounted against
+(``PrivacyAccountant.amplified_epsilon``; arXiv:2301.06412): under uniform
+sampling q_i = L / K_avail, under importance sampling the conservative
+per-client bound q_i = min(1, L * max_k pi_k).
+
+Specs live in ``GFLConfig.cohort`` (flat, hashable)::
+
+    uniform
+    importance,floor=0.1
+    uniform+trace:diurnal,period=24,min=0.2
+    importance+trace:devclass,slow=0.4,p=0.3
+
+The plain ``uniform`` scheduler with an ``always`` trace is the *pure*
+path: the engine then reuses the dense simulator's exact sampling program
+and trajectories stay bit-identical (docs/population.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sampling as IS
+from repro.core.resilience.faults import (
+    STREAM_AVAILABILITY,
+    FaultModel,
+    client_dropout_mask,
+    fault_stream_rng,
+    parse_fault_spec,
+)
+
+_TRACES = ("always", "diurnal", "devclass")
+
+
+@dataclass(frozen=True)
+class AvailabilityTrace:
+    """Per-client availability probabilities as a function of the round.
+
+    ``always``    every client available every round (prob 1);
+    ``diurnal``   sinusoidal day/night pattern: client k's phase is
+                  ``(k mod period) / period`` (clients spread around the
+                  clock), availability in [min, 1];
+    ``devclass``  two device classes: a ``slow`` fraction of clients
+                  (chosen by a golden-ratio hash of k, not by id order) is
+                  available with probability ``p``, the rest always.
+    """
+    kind: str = "always"
+    period: int = 24        # diurnal: rounds per simulated day
+    min_avail: float = 0.2  # diurnal: trough availability
+    slow_frac: float = 0.3  # devclass: fraction of constrained clients
+    slow_p: float = 0.5     # devclass: their availability probability
+
+    def __post_init__(self):
+        if self.kind not in _TRACES:
+            raise ValueError(f"unknown availability trace {self.kind!r}; "
+                             f"expected one of {_TRACES}")
+
+    @property
+    def always_on(self) -> bool:
+        return self.kind == "always"
+
+    def probs(self, round_idx: int, K: int) -> np.ndarray:
+        """[K] availability probabilities for this round."""
+        k = np.arange(K)
+        if self.kind == "always":
+            return np.ones(K)
+        if self.kind == "diurnal":
+            phase = (k % self.period) / self.period
+            wave = 0.5 * (1.0 + np.sin(
+                2.0 * np.pi * (round_idx / self.period + phase)))
+            return self.min_avail + (1.0 - self.min_avail) * wave
+        # devclass: golden-ratio hash decorrelates class from client id
+        u = ((k * 2654435761) % (1 << 32)) / float(1 << 32)
+        return np.where(u < self.slow_frac, self.slow_p, 1.0)
+
+
+def parse_trace_spec(spec: str) -> AvailabilityTrace:
+    """``always`` | ``diurnal[,period=..][,min=..]`` |
+    ``devclass[,slow=..][,p=..]``."""
+    name, *parts = (spec or "always").strip().split(",")
+    kw: dict = {}
+    keys = {"diurnal": {"period": ("period", int), "min": ("min_avail", float)},
+            "devclass": {"slow": ("slow_frac", float), "p": ("slow_p", float)},
+            "always": {}}
+    if name not in keys:
+        raise ValueError(f"unknown availability trace {name!r}; "
+                         f"expected one of {_TRACES}")
+    for part in parts:
+        k, sep, v = part.partition("=")
+        if not sep or k not in keys[name]:
+            raise ValueError(
+                f"unknown argument {part!r} for trace {name!r}")
+        fname, conv = keys[name][k]
+        kw[fname] = conv(v)
+    return AvailabilityTrace(kind=name, **kw)
+
+
+def parse_cohort_spec(spec: str):
+    """``sampler[+trace:<trace spec>]`` -> (sampler, floor, trace)."""
+    spec = (spec or "uniform").strip()
+    trace = AvailabilityTrace()
+    sampler, floor = "uniform", 0.1
+    for part in spec.split("+"):
+        part = part.strip()
+        if part.startswith("trace:"):
+            trace = parse_trace_spec(part[len("trace:"):])
+            continue
+        name, *args = part.split(",")
+        if name not in ("uniform", "importance"):
+            raise ValueError(
+                f"bad cohort component {part!r} in spec {spec!r}; expected "
+                "'uniform' or 'importance[,floor=f]' plus optional "
+                "'trace:<spec>'")
+        sampler = name
+        for a in args:
+            k, sep, v = a.partition("=")
+            if name == "importance" and k == "floor" and sep:
+                floor = float(v)
+            else:
+                raise ValueError(
+                    f"unknown argument {a!r} for cohort sampler {name!r}")
+    return sampler, floor, trace
+
+
+class CohortSelection(NamedTuple):
+    """One round's realized cohort."""
+    client_idx: jax.Array            # [P, L] population client ids
+    weights: Optional[jax.Array]     # [P, L] unbiased 1/(K pi); None = all-1
+    alive: Optional[jax.Array]       # [P, L] bool dropout mask; None = all
+    q: float                         # realized per-round sampling rate
+
+
+class CohortScheduler:
+    """Draws per-round cohorts; owns the IS state and the realized-q ledger.
+
+    Deterministic in ``(seed, round)`` on the host side (availability and
+    dropout realizations), with the jax key passed to :meth:`select`
+    driving the actual client draws — mirroring how the resilience runtime
+    splits host realizations from traced computation.
+    """
+
+    def __init__(self, K: int, L: int, P: int, *, sampler: str = "uniform",
+                 floor: float = 0.1, trace: AvailabilityTrace | str = "always",
+                 fault: FaultModel | str = "none", seed: int = 0):
+        if not 1 <= L <= K:
+            raise ValueError(f"cohort size L={L} not in [1, K={K}]")
+        self.K, self.L, self.P = K, L, P
+        self.sampler = sampler
+        self.floor = floor
+        self.trace = (parse_trace_spec(trace) if isinstance(trace, str)
+                      else trace)
+        self.fault = (parse_fault_spec(fault) if isinstance(fault, str)
+                      else fault)
+        self.seed = seed
+        self.is_state = IS.init_is_state(P, K) if sampler == "importance" \
+            else None
+        self.q_history: list = []
+
+    @classmethod
+    def from_config(cls, cfg, *, K: Optional[int] = None,
+                    L: Optional[int] = None) -> "CohortScheduler":
+        sampler, floor, trace = parse_cohort_spec(cfg.cohort)
+        K = K or cfg.clients_per_server
+        return cls(K, L or cfg.clients_sampled or K, cfg.num_servers,
+                   sampler=sampler, floor=floor, trace=trace,
+                   fault=cfg.fault, seed=cfg.topology_seed)
+
+    @property
+    def pure(self) -> bool:
+        """True when cohort selection is exactly the dense simulator's
+        uniform-without-replacement draw (bit-identical trajectories)."""
+        return self.sampler == "uniform" and self.trace.always_on
+
+    # ------------------------------------------------------- realizations
+
+    def _rng(self, round_idx: int, stream: int) -> np.random.Generator:
+        # the SHARED stream helper: drawing STREAM_DROPOUT with the
+        # scheduler's seed realizes the same masks as
+        # TopologyProcess.client_alive given the same seed
+        return fault_stream_rng(self.seed, stream, round_idx)
+
+    def availability(self, round_idx: int) -> np.ndarray:
+        """[P, K] bool availability mask for the round (all-True for the
+        ``always`` trace).  At least one client per server is forced
+        available — a server with an empty candidate set cannot run."""
+        if self.trace.always_on:
+            return np.ones((self.P, self.K), bool)
+        probs = self.trace.probs(round_idx, self.K)
+        rng = self._rng(round_idx, stream=STREAM_AVAILABILITY)
+        avail = rng.random((self.P, self.K)) < probs[None, :]
+        dead = ~avail.any(axis=1)
+        if dead.any():
+            forced = rng.integers(0, self.K, size=self.P)
+            avail[dead, forced[dead]] = True
+        return avail
+
+    def client_alive(self, round_idx: int) -> Optional[np.ndarray]:
+        """[P, L] mid-round dropout mask over the *sampled* cohort, or None
+        when the fault spec has no dropout component.  THE same realization
+        as ``TopologyProcess.client_alive`` for a shared seed (one
+        implementation: ``resilience.faults.client_dropout_mask``)."""
+        if self.fault.client_dropout <= 0:
+            return None
+        return client_dropout_mask(self.seed, round_idx, self.P, self.L,
+                                   self.fault.client_dropout)
+
+    # ---------------------------------------------------------- selection
+
+    def effective_probs(self, avail: np.ndarray) -> jax.Array:
+        """[P, K] per-client sampling probabilities after masking by
+        availability (rows renormalized)."""
+        if self.sampler == "importance":
+            base = IS.sampling_probs(self.is_state, floor=self.floor)
+        else:
+            base = jnp.full((self.P, self.K), 1.0 / self.K)
+        eff = base * jnp.asarray(avail, jnp.float32)
+        return eff / eff.sum(axis=1, keepdims=True)
+
+    def select(self, key: jax.Array, round_idx: int) -> CohortSelection:
+        """Draw the round's cohort.  On the pure path this is the dense
+        simulator's exact program: choice WITHOUT replacement per server,
+        weights None."""
+        avail = self.availability(round_idx)
+        alive = self.client_alive(round_idx)
+        alive_j = None if alive is None else jnp.asarray(alive)
+        if self.pure:
+            idx = jax.vmap(
+                lambda k: jax.random.choice(k, self.K, (self.L,),
+                                            replace=False)
+            )(jax.random.split(key, self.P))
+            q = self.L / self.K
+            self.q_history.append(q)
+            return CohortSelection(idx, None, alive_j, q)
+
+        probs = self.effective_probs(avail)
+        idx = jax.vmap(
+            lambda k, p: jax.random.choice(k, self.K, (self.L,),
+                                           replace=True, p=p)
+        )(jax.random.split(key, self.P), probs)
+        k_avail = avail.sum(axis=1)
+        weights = IS.importance_weights(probs, idx,
+                                        k_norm=jnp.asarray(k_avail,
+                                                           jnp.float32))
+        if self.sampler == "importance":
+            q = float(min(1.0, self.L * float(probs.max())))
+        else:
+            q = float(min(1.0, self.L / k_avail.min()))
+        self.q_history.append(q)
+        return CohortSelection(idx, weights, alive_j, q)
+
+    def observe(self, client_idx: jax.Array, grad_norms: jax.Array) -> None:
+        """Feed observed per-client gradient norms back into the importance
+        sampler (no-op for the uniform sampler)."""
+        if self.is_state is not None:
+            self.is_state = IS.update_norm_estimates(self.is_state,
+                                                     client_idx, grad_norms)
+
+    @property
+    def realized_q(self) -> float:
+        """Mean realized per-round sampling rate so far (1.0 before any
+        round has been drawn — the conservative no-amplification answer)."""
+        return float(np.mean(self.q_history)) if self.q_history else 1.0

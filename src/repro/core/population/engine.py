@@ -1,0 +1,329 @@
+"""Streaming population-scale executor for the GFL protocol.
+
+Runs :func:`repro.core.gfl.gfl_round` semantics over *virtual* client
+populations: per round only the sampled ``[P, L]`` cohort is materialized
+(``ClientPopulation.gather``), so memory and compute are independent of the
+population size K.  Two execution paths:
+
+**Pure path** (``CohortScheduler.pure``: uniform sampler, always-available
+trace).  The engine reuses the dense simulator's EXACT programs — the same
+jitted cohort sampler (:func:`uniform_cohort_batch`, which
+``simulate.sample_round_batches`` itself delegates to) and the same
+``gfl.make_gfl_step`` step (including the resilience runtime when
+``cfg.fault`` is set) — so at full participation (L = K) trajectories are
+bit-identical to the dense path.  This is the regression anchor of
+tests/test_population.py.
+
+**Weighted path** (importance sampling and/or availability traces).  Cohorts
+are drawn WITH replacement from the scheduler's effective probabilities and
+client updates carry the unbiased ``1/(K pi_k)`` reweighting of [23]
+(:mod:`repro.core.sampling`); observed gradient norms feed the sampler's
+running estimates.  Mid-round dropout routes through the mechanism's
+dropout-safe ``client_protect_masked`` hook (same refusal semantics as the
+resilience runtime); per-round link faults realize effective matrices from
+the ``TopologyProcess``.  Straggler faults need the runtime's psi cache and
+are pure-path only.
+
+``run_gfl_population(..., scan=True)`` additionally compiles the whole
+pure-path run as one ``lax.scan`` over rounds — cohort batches are
+regenerated *inside* the scan body from the round key, so peak memory stays
+at one cohort regardless of the horizon (this is the benchmark path:
+``benchmarks/population_scale.py``).
+
+Privacy composes through the scheduler's realized sampling rate: pass
+``scheduler.realized_q`` (or the per-round ``q`` trace this module returns)
+to ``PrivacyAccountant.amplified_epsilon`` — see docs/population.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core import gfl
+from repro.core.population.cohort import CohortScheduler
+from repro.core.population.population import (
+    ClientPopulation,
+    DensePopulation,
+    population_from_spec,
+)
+from repro.core.privacy.mechanism import RoundContext, mechanism_for
+from repro.core.resilience.process import TopologyProcess
+from repro.core.simulate import (
+    _solve_global,
+    base_combination_matrix,
+    make_grad_fn,
+)
+
+
+def uniform_cohort_batch(key: jax.Array, pop: ClientPopulation, L: int,
+                         batch_size: int):
+    """The dense simulator's cohort draw, over any population.
+
+    Key discipline and index computation are exactly those of the original
+    ``sample_round_batches`` (which now delegates here): split into
+    (clients, batches), choice WITHOUT replacement per server, per-(server,
+    client) minibatch indices.  Returns (h [P, L, B, M], gamma [P, L, B]).
+    """
+    P, K, N = pop.P, pop.num_clients, pop.samples_per_client
+    kc, kb = jax.random.split(key)
+
+    def pick_clients(k):
+        return jax.random.choice(k, K, (L,), replace=False)
+
+    client_idx = jax.vmap(pick_clients)(jax.random.split(kc, P))
+
+    def pick_batch(k):
+        return jax.random.choice(k, N, (batch_size,), replace=False)
+
+    batch_idx = jax.vmap(pick_batch)(
+        jax.random.split(kb, P * L)).reshape(P, L, batch_size)
+    return pop.gather(client_idx, batch_idx)
+
+
+def as_population(source, cfg: GFLConfig) -> ClientPopulation:
+    """Coerce the engine's data source: a ClientPopulation passes through, a
+    materialized LogisticProblem is wrapped dense, None builds the
+    population named by ``cfg.population``."""
+    if isinstance(source, ClientPopulation):
+        return source
+    if source is None:
+        return population_from_spec(cfg)
+    if hasattr(source, "features") and hasattr(source, "labels"):
+        return DensePopulation.from_problem(source)
+    raise TypeError(f"cannot interpret {type(source).__name__} as a "
+                    "client population")
+
+
+def estimate_w_ref(pop: ClientPopulation, *, sample_clients: int = 32,
+                   seed: int = 0, iters: int = 2000) -> jax.Array:
+    """Monte-Carlo reference minimizer for lazy populations: materialize a
+    uniform client subsample and solve its strongly-convex empirical risk
+    to machine precision (exact when sample_clients >= K)."""
+    C = min(sample_clients, pop.num_clients)
+    key = jax.random.PRNGKey(seed)
+    idx = jax.vmap(
+        lambda k: jax.random.choice(k, pop.num_clients, (C,), replace=False)
+    )(jax.random.split(key, pop.P))
+    N = pop.samples_per_client
+    bidx = jnp.broadcast_to(jnp.arange(N)[None, None, :], (pop.P, C, N))
+    h, g = pop.gather(idx, bidx)
+    return _solve_global(h, g, pop.rho, iters=iters)
+
+
+class PopulationRunResult(NamedTuple):
+    """Trajectory of one population-engine run."""
+    msd: np.ndarray            # centroid MSD vs w_ref, every record_every
+    params: jax.Array          # final [P, D] per-server models
+    q: np.ndarray              # realized per-round sampling rate
+    scheduler: CohortScheduler  # carries IS state + q ledger for reuse
+
+
+def _make_weighted_round(pop: ClientPopulation, cfg: GFLConfig, grad_fn,
+                         mech, batch_size: int, use_alive: bool):
+    """jit-ready weighted round: cohort ids/weights (and the dropout mask)
+    are traced runtime args, so one compilation serves every round."""
+    N = pop.samples_per_client
+    tau = cfg.combine_every
+
+    @jax.jit
+    def round_fn(params, key, step_i, A_r, idx, weights, alive):
+        ctx = RoundContext(step=step_i)
+        k_batch, k_priv, k_comb = jax.random.split(key, 3)
+        P, L = idx.shape
+        bidx = jax.vmap(
+            lambda k: jax.random.choice(k, N, (batch_size,), replace=False)
+        )(jax.random.split(k_batch, P * L)).reshape(P, L, batch_size)
+        h, g = pop.gather(idx, bidx)
+
+        def one_server(w_p, h_p, g_p, w_row, key_p, alive_p):
+            def one_client(hb, gb, wgt):
+                grad = grad_fn(w_p, (hb, gb))
+                # the importance weight is applied BEFORE the sensitivity
+                # clip: each client's step stays inside the mu*B ball the
+                # privacy calibration (eq. 26) assumes, so heavy cohort
+                # weights saturate (clipping bias) instead of silently
+                # inflating the sensitivity the noise was scaled for.  The
+                # sampler's norm feedback stays the unweighted clipped norm.
+                step_g = gfl.clip_to_bound(wgt * grad, cfg.grad_bound)
+                clipped = gfl.clip_to_bound(grad, cfg.grad_bound)
+                return w_p - cfg.mu * step_g, jnp.linalg.norm(clipped)
+
+            w_clients, norms = jax.vmap(one_client)(h_p, g_p, w_row)
+            if use_alive:
+                psi = mech.client_protect_masked(w_clients, key_p, alive_p,
+                                                 ctx)
+            else:
+                psi = mech.client_protect(w_clients, key_p, ctx)
+            return psi, norms
+
+        alive_arg = alive if use_alive else jnp.ones_like(idx, jnp.bool_)
+        psi, norms = jax.vmap(one_server)(
+            params, h, g, weights, jax.random.split(k_priv, P), alive_arg)
+        if tau > 1:
+            do_combine = step_i % tau == tau - 1
+            new_params = jax.lax.cond(
+                do_combine,
+                lambda p: mech.server_combine(p, k_comb, A_r, ctx),
+                lambda p: p, psi)
+        else:
+            new_params = mech.server_combine(psi, k_comb, A_r, ctx)
+        return new_params, norms
+
+    return round_fn
+
+
+def run_gfl_population(source, cfg: GFLConfig, *, iters: int,
+                       batch_size: int = 10, seed: int = 0,
+                       record_every: int = 1,
+                       A: Optional[np.ndarray] = None,
+                       process: Optional[TopologyProcess] = None,
+                       scheduler: Optional[CohortScheduler] = None,
+                       w_ref=None, scan: bool = False
+                       ) -> PopulationRunResult:
+    """Run the GFL protocol over a (virtual) client population.
+
+    ``source``: a :class:`ClientPopulation`, a materialized
+    ``LogisticProblem`` (wrapped dense), or None (build from
+    ``cfg.population``).  Cohort behavior comes from ``cfg.cohort`` (or an
+    explicit ``scheduler``), faults from ``cfg.fault`` exactly as in
+    ``run_gfl``.  On the pure scheduler path this function IS ``run_gfl``
+    modulo the population abstraction — bit-identical at L = K.
+    """
+    pop = as_population(source, cfg)
+    P, K = pop.P, pop.num_clients
+    grad_fn = make_grad_fn(pop.rho)
+    if scheduler is None:
+        scheduler = CohortScheduler.from_config(
+            cfg, K=K, L=cfg.clients_sampled or K)
+    L = scheduler.L
+    if w_ref is None:
+        w_ref = pop.w_ref
+    if w_ref is None:
+        # lazy populations carry no minimizer — estimate one so res.msd is
+        # an actual mean-square deviation, not distance-to-origin (pass an
+        # explicit w_ref to skip the one-off Monte-Carlo solve)
+        w_ref = estimate_w_ref(pop)
+    w_ref_j = jnp.asarray(w_ref)
+
+    if process is None and cfg.fault != "none":
+        base = A if A is not None else base_combination_matrix(cfg, P)
+        process = TopologyProcess(base, cfg.fault, seed=cfg.topology_seed)
+    if A is None:
+        A = base_combination_matrix(cfg, P)
+
+    if scheduler.pure:
+        if scan:
+            if process is not None or cfg.combine_every > 1:
+                raise ValueError(
+                    "scan executor supports the static-topology, "
+                    "combine_every=1 pure path; use scan=False")
+            msd, params = _run_pure_scan(pop, cfg, A, grad_fn, L,
+                                         batch_size, iters, seed, w_ref_j)
+            msd = msd[::record_every]
+            q = np.full(iters, L / K)
+            scheduler.q_history.extend(q.tolist())
+            return PopulationRunResult(np.asarray(msd), params, q, scheduler)
+        msd, params = _run_pure_loop(pop, cfg, A, process, grad_fn, L,
+                                     batch_size, iters, seed, record_every,
+                                     w_ref_j)
+        q = np.full(iters, L / K)
+        scheduler.q_history.extend(q.tolist())
+        return PopulationRunResult(np.asarray(msd), params, q, scheduler)
+
+    # ------------------------------------------------------- weighted path
+    if scan:
+        raise ValueError(
+            "scan executor supports only the pure cohort path (uniform "
+            "sampler, always trace); weighted cohorts need per-round host "
+            "realizations — use scan=False")
+    if process is not None and process.fault.straggler > 0:
+        raise ValueError(
+            "straggler faults need the resilience runtime's psi cache and "
+            "are only supported on the pure cohort path (uniform sampler, "
+            "always trace); drop the straggler: component or use "
+            "cohort='uniform'")
+    mech = mechanism_for(cfg)
+    use_alive = scheduler.fault.client_dropout > 0
+    if use_alive:
+        from repro.core.resilience.runtime import ensure_dropout_safe
+        ensure_dropout_safe(mech.noise_profile(),
+                            where="population cohort dropout")
+    round_fn = _make_weighted_round(pop, cfg, grad_fn, mech, batch_size,
+                                    use_alive)
+    Aj = jnp.asarray(A, jnp.float32)
+
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    state = gfl.init_state(k_init, P, pop.dim)
+    params = state.params
+    msd = []
+    for i in range(iters):
+        key, sub = jax.random.split(key)
+        k_sel, k_round = jax.random.split(sub)
+        sel = scheduler.select(k_sel, i)
+        A_r = (jnp.asarray(process.realize(i).A, jnp.float32)
+               if process is not None and not process.static else Aj)
+        weights = (sel.weights if sel.weights is not None
+                   else jnp.ones((P, L)))
+        alive = (sel.alive if sel.alive is not None
+                 else jnp.ones((P, L), jnp.bool_))
+        params, norms = round_fn(params, k_round, jnp.asarray(i, jnp.int32),
+                                 A_r, sel.client_idx, weights, alive)
+        scheduler.observe(sel.client_idx, norms)
+        if i % record_every == 0:
+            wc = gfl.centroid(params)
+            msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
+    return PopulationRunResult(np.asarray(msd), params,
+                               np.asarray(scheduler.q_history[-iters:]),
+                               scheduler)
+
+
+def _run_pure_loop(pop, cfg, A, process, grad_fn, L, batch_size, iters,
+                   seed, record_every, w_ref_j):
+    """The dense simulator's loop verbatim, over the population gather."""
+    if process is not None:
+        step = gfl.make_gfl_step(process, grad_fn, cfg)
+    else:
+        step = gfl.make_gfl_step(jnp.asarray(A), grad_fn, cfg)
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    state = gfl.init_state(k_init, pop.P, pop.dim)
+    sample = jax.jit(lambda k: uniform_cohort_batch(k, pop, L, batch_size))
+    msd = []
+    for i in range(iters):
+        key, kb = jax.random.split(key)
+        state = step(state, sample(kb))
+        if i % record_every == 0:
+            wc = gfl.centroid(state.params)
+            msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
+    return msd, state.params
+
+
+def _run_pure_scan(pop, cfg, A, grad_fn, L, batch_size, iters, seed,
+                   w_ref_j):
+    """Whole-run lax.scan: one compilation, cohort regenerated per round
+    inside the body — peak memory is ONE [P, L, B, M] cohort."""
+    mech = mechanism_for(cfg)
+    Aj = jnp.asarray(A)
+
+    def body(carry, _):
+        loop_key, state = carry
+        loop_key, kb = jax.random.split(loop_key)
+        batch = uniform_cohort_batch(kb, pop, L, batch_size)
+        key, sub = jax.random.split(state.key)
+        new_params = gfl.gfl_round(state.params, batch, sub, A=Aj,
+                                   grad_fn=grad_fn, cfg=cfg, mechanism=mech,
+                                   step=state.step)
+        new_state = gfl.GFLState(new_params, state.step + 1, key)
+        msd = jnp.sum((gfl.centroid(new_params) - w_ref_j) ** 2)
+        return (loop_key, new_state), msd
+
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    state = gfl.init_state(k_init, pop.P, pop.dim)
+    (_, state), msd = jax.lax.scan(body, (key, state), None, length=iters)
+    return np.asarray(msd), state.params

@@ -1,0 +1,367 @@
+"""Lazy client populations: any client's shard from (data_seed, server, client).
+
+The dense simulator materializes every client's data as one ``[P, K, N, M]``
+tensor, which caps the reproduction at P=10 x K=50 even though the ROADMAP
+north-star is millions of users.  This module makes K a *virtual* quantity:
+a :class:`ClientPopulation` regenerates any client's shard on demand, so
+memory and compute scale with the sampled cohort ``[P, L]`` rather than the
+population ``[P, K]`` — the partial-participation regime analyzed by
+Privatized Graph Federated Learning (arXiv:2203.07105).
+
+Three families:
+
+``DensePopulation``
+    wraps already-materialized ``[P, K, N, M]`` arrays (the Section-V
+    problem).  This is the regression anchor: the population engine over a
+    dense population at full participation is bit-identical to the dense
+    simulator path (`tests/test_population.py`).
+
+``SyntheticPopulation``
+    the Section-V generative model evaluated lazily per client: client
+    ``(p, k)``'s shard is a pure function of ``(data_seed, p, k)`` via
+    ``jax.random.fold_in`` chains (the counter-based discipline of
+    repro.data.synthetic).  Heterogeneity is pluggable: ``iid`` (one global
+    sigma_h), ``hetero`` (per-client sigma_h as in the paper's Section V),
+    ``mixture`` (cluster drift: clients belong to latent clusters whose
+    class-conditional means drift away from the global +-1 mean).
+
+``DirichletPopulation``
+    non-IID label skew over a finite labeled pool via
+    :func:`repro.data.partition.dirichlet_partition`: the pool stays
+    materialized once (``[n, M]``) and only an int32 index tensor
+    ``[P, K, N]`` is built — never a ``[P, K, N, M]`` data tensor.
+
+Specs are compact strings stored in ``GFLConfig.population`` so configs stay
+flat and hashable (grammar in docs/population.md), parsed by
+:func:`parse_population_spec`::
+
+    dense
+    synthetic:iid,sigma=1.0
+    synthetic:hetero,lo=0.5,hi=1.5
+    synthetic:mixture,clusters=4,drift=0.5
+    dirichlet:0.3,pool=4000
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_KINDS = ("dense", "synthetic", "iid", "hetero", "mixture", "dirichlet")
+
+
+@dataclass(frozen=True)
+class PopulationSpec:
+    """Parsed ``GFLConfig.population`` string."""
+    kind: str                      # dense | iid | hetero | mixture | dirichlet
+    args: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown population kind {self.kind!r}; "
+                             f"expected one of {_KINDS}")
+
+
+# keys each population kind accepts (shared: n, dim, rho); misspelled keys
+# are rejected rather than silently falling back to defaults — same
+# strictness as the cohort/trace/fault parsers
+_ALLOWED_KEYS = {
+    "dense": frozenset(),
+    "iid": frozenset({"sigma", "n", "dim", "rho"}),
+    "hetero": frozenset({"lo", "hi", "n", "dim", "rho"}),
+    "mixture": frozenset({"clusters", "drift", "sigma", "n", "dim", "rho"}),
+    "dirichlet": frozenset({"alpha", "pool", "sigma", "n", "dim", "rho"}),
+}
+
+
+def parse_population_spec(spec: str) -> PopulationSpec:
+    """Parse a ``GFLConfig.population`` string.
+
+    Form: ``name[:variant][,key=value]*`` — ``synthetic:<variant>`` selects
+    the heterogeneity model, ``dirichlet:<alpha>`` passes alpha positionally.
+    """
+    spec = (spec or "dense").strip()
+    head, _, rest = spec.partition(",")
+    name, _, variant = head.partition(":")
+    args: dict = {}
+    if rest:
+        for part in rest.split(","):
+            k, sep, v = part.partition("=")
+            if not sep:
+                raise ValueError(
+                    f"bad population argument {part!r} in spec {spec!r}; "
+                    "expected key=value")
+            try:
+                args[k.strip()] = float(v) if "." in v or "e" in v.lower() \
+                    else int(v)
+            except ValueError:
+                raise ValueError(
+                    f"bad population argument value {v!r} in {spec!r}"
+                ) from None
+    if name == "dense":
+        if variant:
+            raise ValueError(f"dense population takes no variant: {spec!r}")
+        kind = "dense"
+    elif name == "synthetic":
+        kind = variant or "hetero"
+        if kind not in ("iid", "hetero", "mixture"):
+            raise ValueError(
+                f"unknown synthetic variant {variant!r} in {spec!r}; "
+                "expected iid | hetero | mixture")
+    elif name == "dirichlet":
+        kind = "dirichlet"
+        if variant:
+            args["alpha"] = float(variant)
+    else:
+        raise ValueError(f"unknown population spec {spec!r}; expected "
+                         "dense | synthetic:<variant> | dirichlet:<alpha>")
+    unknown = set(args) - _ALLOWED_KEYS[kind]
+    if unknown:
+        raise ValueError(
+            f"unknown argument(s) {sorted(unknown)} for population kind "
+            f"{kind!r} in {spec!r}; allowed: "
+            f"{sorted(_ALLOWED_KEYS[kind])}")
+    return PopulationSpec(kind, args)
+
+
+class ClientPopulation:
+    """A virtual fleet of P x K clients with deterministic shard access.
+
+    Shapes: ``num_clients`` = K clients per server (virtual — never
+    materialized), ``samples_per_client`` = N, ``dim`` = M.  ``gather`` is
+    the only hot-path method: it materializes exactly the requested cohort
+    ``[P, L, B, M]`` and is jax-traceable for every built-in population, so
+    it can live inside a jitted sampler or a lax.scan over rounds.
+
+    ``rho`` is the regularization of the client risk (the population is the
+    data side of the Section-V logistic problem); ``w_ref`` an optional
+    reference minimizer for MSD traces (exact for dense populations,
+    Monte-Carlo for lazy ones — see ``engine.estimate_w_ref``).
+    """
+
+    P: int
+    num_clients: int
+    samples_per_client: int
+    dim: int
+    rho: float = 0.01
+    w_ref: Optional[jax.Array] = None
+    traceable: bool = True
+
+    def gather(self, client_idx: jax.Array, batch_idx: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+        """Cohort minibatches.  client_idx: [P, L] in [0, K); batch_idx:
+        [P, L, B] in [0, N).  Returns (h [P, L, B, M], gamma [P, L, B])."""
+        raise NotImplementedError
+
+    def client_shard(self, p: int, k: int) -> Tuple[jax.Array, jax.Array]:
+        """One client's full shard (h [N, M], gamma [N]) — debug/host access."""
+        N = self.samples_per_client
+        cid = jnp.asarray([[k]])
+        bidx = jnp.arange(N).reshape(1, 1, N)
+        h, g = self.gather(jnp.broadcast_to(cid, (self.P, 1)),
+                           jnp.broadcast_to(bidx, (self.P, 1, N)))
+        return h[p, 0], g[p, 0]
+
+
+class DensePopulation(ClientPopulation):
+    """Materialized arrays as a population — the regression anchor.
+
+    ``gather`` is the exact fancy-indexing of the dense simulator's
+    ``sample_round_batches`` (same index expression, same dtypes), so the
+    population engine at full participation reproduces the dense trajectory
+    bit-for-bit."""
+
+    def __init__(self, features: jax.Array, labels: jax.Array,
+                 rho: float = 0.01, w_ref: Optional[jax.Array] = None):
+        P, K, N, M = features.shape
+        self.features = features
+        self.labels = labels
+        self.P, self.num_clients = P, K
+        self.samples_per_client, self.dim = N, M
+        self.rho = rho
+        self.w_ref = w_ref
+
+    @classmethod
+    def from_problem(cls, prob) -> "DensePopulation":
+        """Wrap a :class:`repro.core.simulate.LogisticProblem`."""
+        return cls(prob.features, prob.labels, rho=prob.rho,
+                   w_ref=prob.w_opt)
+
+    def gather(self, client_idx, batch_idx):
+        p_idx = jnp.arange(self.P)[:, None, None]
+        h = self.features[p_idx, client_idx[:, :, None], batch_idx]
+        g = self.labels[p_idx, client_idx[:, :, None], batch_idx]
+        return h, g
+
+
+class SyntheticPopulation(ClientPopulation):
+    """Section-V generative model, lazily per client.
+
+    Client ``(p, k)``'s shard is a pure function of ``(data_seed, p, k)``:
+    labels gamma = +-1 Bernoulli(1/2), features h | gamma ~ N(gamma * m_k,
+    sigma_k^2 I).  Heterogeneity mode picks (m_k, sigma_k):
+
+    ``iid``      m_k = 1-vector, sigma_k = sigma (one global value);
+    ``hetero``   m_k = 1-vector, sigma_k ~ U[lo, hi] per client (the
+                 paper's Section-V heterogeneity);
+    ``mixture``  client k belongs to cluster ``k mod clusters``; the
+                 cluster's class mean is the 1-vector plus a drift-scaled
+                 Gaussian offset (cluster/mixture drift — clients inside a
+                 cluster agree, clusters disagree), sigma_k = sigma.
+
+    No [P, K, ...] tensor exists anywhere: ``gather`` vmaps the per-client
+    generator over the cohort only.
+    """
+
+    def __init__(self, P: int, K: int, *, mode: str = "hetero",
+                 N: int = 100, M: int = 2, data_seed: int = 0,
+                 sigma: float = 1.0, lo: float = 0.5, hi: float = 1.5,
+                 clusters: int = 4, drift: float = 0.5, rho: float = 0.01):
+        if mode not in ("iid", "hetero", "mixture"):
+            raise ValueError(f"unknown synthetic mode {mode!r}")
+        self.P, self.num_clients = P, K
+        self.samples_per_client, self.dim = N, M
+        self.mode, self.data_seed = mode, data_seed
+        self.sigma, self.lo, self.hi = sigma, lo, hi
+        self.clusters, self.drift = max(int(clusters), 1), drift
+        self.rho = rho
+        self.w_ref = None
+
+    def _client_key(self, p, k):
+        base = jax.random.PRNGKey(self.data_seed)
+        return jax.random.fold_in(jax.random.fold_in(base, p), k)
+
+    def _client_mean(self, k):
+        """Class-conditional mean direction m_k (the +-1 '1-vector' of the
+        paper, drifted per latent cluster in mixture mode)."""
+        ones = jnp.ones((self.dim,), jnp.float32)
+        if self.mode != "mixture":
+            return ones
+        cluster = jnp.mod(k, self.clusters)
+        # dedicated cluster stream (disjoint from the per-client fold_in
+        # chain, which only ever folds in ids < K)
+        ckey = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.data_seed),
+                               0x7FFF_FFFF), cluster)
+        return ones + self.drift * jax.random.normal(ckey, (self.dim,))
+
+    def _client_sigma(self, key_sigma):
+        if self.mode == "hetero":
+            return jax.random.uniform(key_sigma, (), minval=self.lo,
+                                      maxval=self.hi)
+        return jnp.asarray(self.sigma, jnp.float32)
+
+    def _shard(self, p, k):
+        """(h [N, M], gamma [N]) for client (p, k); p, k may be traced."""
+        N, M = self.samples_per_client, self.dim
+        kl, ks, kn = jax.random.split(self._client_key(p, k), 3)
+        gamma = jnp.where(jax.random.bernoulli(kl, 0.5, (N,)), 1.0, -1.0)
+        sigma = self._client_sigma(ks)
+        mean = gamma[:, None] * self._client_mean(k)[None, :]
+        h = mean + sigma * jax.random.normal(kn, (N, M))
+        return h, gamma
+
+    def gather(self, client_idx, batch_idx):
+        P, L = client_idx.shape
+        p_ids = jnp.broadcast_to(jnp.arange(P)[:, None], (P, L))
+
+        def one(p, k, bidx):
+            h, g = self._shard(p, k)
+            return h[bidx], g[bidx]
+
+        return jax.vmap(jax.vmap(one))(p_ids, client_idx, batch_idx)
+
+
+class DirichletPopulation(ClientPopulation):
+    """Label-skew shards over a finite pool via ``dirichlet_partition``.
+
+    The pool ([n, M] features, [n] +-1 labels) is materialized ONCE and
+    shared; each client owns an index list from the Dirichlet split, cycled
+    out to a fixed per-client length N so the gather stays rectangular and
+    traceable.  Total extra memory is the [P, K, N] int32 index tensor —
+    suitable for materialized datasets at modest K (for virtual-K scale use
+    a synthetic population).
+    """
+
+    def __init__(self, features, labels, P: int, K: int, *,
+                 alpha: float = 0.5, N: int = 0, data_seed: int = 0,
+                 rho: float = 0.01):
+        from repro.data.partition import dirichlet_partition
+
+        features = jnp.asarray(features)
+        labels = jnp.asarray(labels)
+        shards = dirichlet_partition(np.asarray(labels), P, K, alpha=alpha,
+                                     seed=data_seed, min_per_client=1)
+        n_max = max(len(shards[p][k]) for p in range(P) for k in range(K))
+        N = int(N) or n_max
+        idx = np.zeros((P, K, N), np.int32)
+        for p in range(P):
+            for k in range(K):
+                # cycle the client's indices out to length N (rectangular
+                # gather); every original index appears at least once when
+                # N >= len(shard)
+                idx[p, k] = np.resize(shards[p][k], N)
+        self.pool_h, self.pool_g = features, labels
+        self.index = jnp.asarray(idx)
+        self.P, self.num_clients = P, K
+        self.samples_per_client, self.dim = N, int(features.shape[-1])
+        self.alpha, self.rho = alpha, rho
+        self.w_ref = None
+
+    @classmethod
+    def synthetic_pool(cls, P: int, K: int, *, alpha: float = 0.5,
+                       pool: int = 0, M: int = 2, sigma: float = 1.0,
+                       N: int = 0, data_seed: int = 0, rho: float = 0.01
+                       ) -> "DirichletPopulation":
+        """Section-V-style pool (gamma = +-1, h ~ N(gamma*1, sigma^2 I)) of
+        ``pool`` samples, Dirichlet-split across the P x K clients."""
+        n = int(pool) or P * K * 20
+        key = jax.random.PRNGKey(data_seed)
+        k1, k2 = jax.random.split(key)
+        g = jnp.where(jax.random.bernoulli(k1, 0.5, (n,)), 1.0, -1.0)
+        h = g[:, None] + sigma * jax.random.normal(k2, (n, M))
+        return cls(h, g, P, K, alpha=alpha, N=N, data_seed=data_seed,
+                   rho=rho)
+
+    def gather(self, client_idx, batch_idx):
+        p_idx = jnp.arange(self.P)[:, None, None]
+        sample_idx = self.index[p_idx, client_idx[:, :, None], batch_idx]
+        return self.pool_h[sample_idx], self.pool_g[sample_idx]
+
+
+def population_from_spec(cfg, *, P: Optional[int] = None,
+                         K: Optional[int] = None) -> ClientPopulation:
+    """Build the population named by ``cfg.population`` for a GFLConfig.
+
+    ``dense`` has no lazy generator — callers hold the materialized problem
+    and wrap it with :meth:`DensePopulation.from_problem`; asking the spec
+    registry for it is an error that names the fix.
+    """
+    spec = parse_population_spec(cfg.population)
+    P = P or cfg.num_servers
+    K = K or cfg.clients_per_server
+    a = spec.args
+    if spec.kind == "dense":
+        raise ValueError(
+            "population='dense' wraps a materialized problem — pass the "
+            "problem to the engine (DensePopulation.from_problem) instead "
+            "of building it from the spec")
+    if spec.kind in ("iid", "hetero", "mixture"):
+        return SyntheticPopulation(
+            P, K, mode=spec.kind,
+            N=int(a.get("n", 100)), M=int(a.get("dim", 2)),
+            data_seed=cfg.data_seed,
+            sigma=float(a.get("sigma", 1.0)),
+            lo=float(a.get("lo", 0.5)), hi=float(a.get("hi", 1.5)),
+            clusters=int(a.get("clusters", 4)),
+            drift=float(a.get("drift", 0.5)),
+            rho=float(a.get("rho", 0.01)))
+    # dirichlet
+    return DirichletPopulation.synthetic_pool(
+        P, K, alpha=float(a.get("alpha", 0.5)),
+        pool=int(a.get("pool", 0)), M=int(a.get("dim", 2)),
+        sigma=float(a.get("sigma", 1.0)), N=int(a.get("n", 0)),
+        data_seed=cfg.data_seed, rho=float(a.get("rho", 0.01)))

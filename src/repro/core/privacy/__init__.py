@@ -18,6 +18,7 @@ from repro.core.privacy.homomorphic import (
 )
 from repro.core.privacy.accountant import (
     PrivacyAccountant,
+    amplified_release_epsilon,
     epsilon_at,
     gaussian_epsilon_at,
     gaussian_sigma_for_epsilon,
@@ -50,6 +51,7 @@ __all__ = [
     "homomorphic_noise_matrix",
     "homomorphic_combine_noise",
     "PrivacyAccountant",
+    "amplified_release_epsilon",
     "epsilon_at",
     "gaussian_epsilon_at",
     "gaussian_sigma_for_epsilon",

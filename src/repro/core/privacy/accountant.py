@@ -23,6 +23,15 @@ selected by a :class:`PrivacyMechanism`'s ``noise_profile().curve``:
     hits ``eps_target`` exactly at the horizon (instead of Theorem 2's
     quadratic blow-up).  ``scheduled_sigma_at`` is traced-value safe and is
     what the ``scheduled`` mechanism evaluates inside jit.
+
+Every curve additionally exposes an **amplification-by-subsampling**
+variant (arXiv:2301.06412 accounting for the partial-participation regime
+of arXiv:2203.07105): when round j samples each client with probability
+q_j — the ``CohortScheduler``'s realized rate L/K — release j is charged
+``ln(1 + q_j (e^{eps_j} - 1))`` instead of its full-participation eps_j
+(and deltas scale to ``q_j * delta``).  ``advance(steps, q=...)`` records
+realized rates; ``amplified_epsilon()`` / ``amplified_delta()`` read the
+amplified ledger, and q = 1 reproduces the unamplified curve exactly.
 """
 from __future__ import annotations
 
@@ -125,6 +134,35 @@ def scheduled_epsilon_spent(i: int, horizon: int, eps_target: float) -> float:
     return eps_target * i / horizon
 
 
+# ---------------------------------------------- subsampling amplification --
+
+
+def amplified_release_epsilon(eps: float, q: float) -> float:
+    """Privacy amplification by subsampling for ONE release.
+
+    A mechanism that is eps-DP on the full population is
+    ``ln(1 + q (e^eps - 1))``-DP when each client participates with
+    probability q (and a delta, if any, scales to q * delta) — the
+    partial-participation accounting of arXiv:2301.06412 / the classic
+    subsampling lemma.  q = 1 returns eps exactly; q -> 0 approaches
+    q * eps (the small-budget linear regime).
+    """
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"sampling rate q={q} not in (0, 1]")
+    if q == 1.0 or math.isinf(eps):
+        return eps
+    if eps <= 30.0:
+        return math.log1p(q * math.expm1(eps))
+    # large eps: rewrite as ln(e^{ln q + eps} + (1 - q)) so nothing
+    # overflows and a tiny q cannot drive the result negative (q e^eps
+    # may still be < 1 there — the naive eps + ln q shortcut is wrong
+    # until q e^eps dominates)
+    x = math.log(q) + eps
+    if x > 700.0:            # e^x would overflow float64; (1-q) vanishes
+        return x
+    return math.log1p(math.exp(x) - q)
+
+
 _CURVES = ("laplace_thm2", "gaussian", "scheduled", "none")
 
 
@@ -147,6 +185,8 @@ class PrivacyAccountant:
     horizon: int = 0
     epsilon_target: float = 0.0
     distribution: str = "laplace"
+    sampling_rate: float = 1.0     # default per-round cohort rate q = L/K
+    q_history: list = field(default_factory=list)  # realized q per release
 
     def __post_init__(self):
         if self.curve not in _CURVES:
@@ -163,7 +203,20 @@ class PrivacyAccountant:
                    epsilon_target=profile.epsilon_target,
                    distribution=profile.distribution)
 
-    def advance(self, steps: int = 1) -> float:
+    def advance(self, steps: int = 1, q: float | None = None) -> float:
+        """Advance the ledger by `steps` releases.
+
+        ``q`` records the realized cohort sampling rate of those releases
+        (defaults to the accountant's ``sampling_rate``).  Pass the rate
+        the rounds ACTUALLY ran at — per round, ``CohortSelection.q`` —
+        not a running mean over rounds with different rates: the
+        amplification bound is per release, and averaging a varying q
+        before recording under-reports the spend.  The returned epsilon is
+        the UNAMPLIFIED curve (the paper's full-participation ledger);
+        :meth:`amplified_epsilon` reads the amplified one.
+        """
+        self.q_history.extend([self.sampling_rate if q is None else q]
+                              * steps)
         self.step += steps
         eps = self.epsilon()
         self.history.append((self.step, eps))
@@ -179,6 +232,61 @@ class PrivacyAccountant:
             return scheduled_epsilon_spent(self.step, self.horizon,
                                            self.epsilon_target)
         return epsilon_at(self.step, self.mu, self.grad_bound, self.sigma_g)
+
+    def per_release_epsilon(self, j: int) -> float:
+        """Epsilon of release j alone (1-indexed), i.e. the increment the
+        composed curve charges at step j: the Theorem-2 Laplace/Gaussian
+        curves satisfy eps(i) = sum_{j<=i} c * 2 mu B j / sigma, and the
+        scheduled curve spends a uniform eps_target / horizon slice."""
+        if self.curve == "none":
+            return 0.0
+        if self.curve == "scheduled":
+            if self.horizon <= 0:
+                raise ValueError("scheduled curve needs a positive horizon")
+            return self.epsilon_target / self.horizon
+        if self.sigma_g <= 0:
+            return float("inf")
+        const = (_gaussian_const(self.delta) if self.curve == "gaussian"
+                 else 2.0 ** 0.5)
+        return const * 2.0 * self.mu * self.grad_bound * j / self.sigma_g
+
+    def _release_qs(self) -> list:
+        """Realized per-release sampling rates, padded with the default."""
+        qs = list(self.q_history[:self.step])
+        qs += [self.sampling_rate] * (self.step - len(qs))
+        return qs
+
+    def amplified_epsilon(self, q: float | None = None) -> float:
+        """Composed epsilon under amplification by subsampling.
+
+        Each release j is charged ``ln(1 + q_j (e^{eps_j} - 1))`` instead
+        of eps_j, where q_j is the realized cohort sampling rate recorded
+        by :meth:`advance` (override every q_j with the ``q`` argument).
+        q = 1 reproduces :meth:`epsilon` exactly — unit-pinned in
+        tests/test_privacy.py.
+        """
+        if self.curve == "none":
+            return 0.0
+        qs = [q] * self.step if q is not None else self._release_qs()
+        return sum(amplified_release_epsilon(self.per_release_epsilon(j), qj)
+                   for j, qj in enumerate(qs, start=1))
+
+    def amplified_delta(self, q: float | None = None) -> float:
+        """Composed delta under subsampling: each release's delta scales by
+        its q before the basic-composition sum."""
+        if self.distribution != "gaussian":
+            return 0.0
+        qs = [q] * self.step if q is not None else self._release_qs()
+        return self.delta * sum(qs)
+
+    def amplification_curve(self, steps: int, q: float) -> list:
+        """Prospective amplified-epsilon trajectory [(i, eps_amp(i))] for a
+        fixed sampling rate q — does not mutate the ledger."""
+        out, total = [], 0.0
+        for j in range(1, steps + 1):
+            total += amplified_release_epsilon(self.per_release_epsilon(j), q)
+            out.append((j, total))
+        return out
 
     def delta_spent(self) -> float:
         """Composed delta after `step` releases: the per-release deltas add

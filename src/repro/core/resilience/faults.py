@@ -36,7 +36,47 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 _COMPONENTS = ("links", "outage", "straggler", "dropout")
+
+# named streams of the per-round fault/availability realizations; every
+# consumer MUST draw through fault_stream_rng so realizations agree across
+# components (e.g. a CohortScheduler and a TopologyProcess sharing a seed
+# realize identical client-dropout masks — stream 3)
+STREAM_TOPOLOGY = 1
+STREAM_STRAGGLER = 2
+STREAM_DROPOUT = 3
+STREAM_AVAILABILITY = 4
+
+
+def fault_stream_rng(seed: int, stream: int, round_idx: int
+                     ) -> np.random.Generator:
+    """Deterministic per-(seed, stream, round) generator shared by every
+    host-side fault realization (TopologyProcess, CohortScheduler).
+    Streams keep the topology / straggler / dropout / availability draws
+    independent while staying pure functions of (seed, round)."""
+    return np.random.default_rng((0x5EED, seed, stream, int(round_idx)))
+
+
+def client_dropout_mask(seed: int, round_idx: int, P: int, L: int,
+                        dropout: float) -> np.ndarray:
+    """[P, L] participation mask for the round's sampled clients — THE
+    dropout realization, shared by ``TopologyProcess.client_alive`` and
+    ``CohortScheduler.client_alive`` so both sides of the contract (fault
+    execution and cohort accounting) see identical masks for a seed.
+
+    Each sampled client drops with probability ``dropout``; at least one
+    client per server always survives (a server whose whole cohort
+    vanished has nothing to aggregate and simply re-runs the round —
+    modeled as one forced survivor)."""
+    rng = fault_stream_rng(seed, STREAM_DROPOUT, round_idx)
+    alive = rng.random((P, L)) >= dropout
+    dead_rows = ~alive.any(axis=1)
+    if dead_rows.any():
+        survivor = rng.integers(0, L, size=P)
+        alive[dead_rows, survivor[dead_rows]] = True
+    return alive
 
 
 @dataclass(frozen=True)

@@ -36,7 +36,14 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.core.resilience.faults import FaultModel, parse_fault_spec
+from repro.core.resilience.faults import (
+    STREAM_DROPOUT,
+    STREAM_STRAGGLER,
+    STREAM_TOPOLOGY,
+    FaultModel,
+    fault_stream_rng,
+    parse_fault_spec,
+)
 from repro.core.topology import spectral_gap, validate_combination_matrix
 
 
@@ -118,10 +125,9 @@ class TopologyProcess:
     # ------------------------------------------------------------ sampling
 
     def _rng(self, round_idx: int, stream: int) -> np.random.Generator:
-        """Deterministic per-(round, stream) generator; streams keep the
-        topology, straggler and client-dropout draws independent."""
-        return np.random.default_rng(
-            (0x5EED, self.seed, stream, int(round_idx)))
+        """Deterministic per-(round, stream) generator (shared stream
+        discipline — see repro.core.resilience.faults.fault_stream_rng)."""
+        return fault_stream_rng(self.seed, stream, round_idx)
 
     def realize(self, round_idx: int) -> RoundRealization:
         """Effective topology for round ``round_idx`` (memoized)."""
@@ -147,7 +153,7 @@ class TopologyProcess:
             return RoundRealization(self.base_A, self.base_mask.copy(),
                                     straggler, self._base_gap)
 
-        rng = self._rng(round_idx, stream=1)
+        rng = self._rng(round_idx, stream=STREAM_TOPOLOGY)
         P = self.P
         up = (rng.random(P) >= f.outage) if f.outage > 0 else np.ones(P, bool)
         alive: list[tuple[int, int]] = []
@@ -189,26 +195,18 @@ class TopologyProcess:
         force a refresh once a server's psi hits the staleness bound)."""
         if self.fault.straggler <= 0:
             return np.zeros(self.P, bool)
-        rng = self._rng(round_idx, stream=2)
+        rng = self._rng(round_idx, stream=STREAM_STRAGGLER)
         return rng.random(self.P) < self.fault.straggler
 
     def client_alive(self, round_idx: int, L: int) -> np.ndarray:
-        """[P, L] participation mask for the round's sampled clients.
-
-        Each sampled client drops with probability ``client_dropout``; at
-        least one client per server always survives (a server whose whole
-        cohort vanished has nothing to aggregate and simply re-runs the
-        round — modeled as one forced survivor).
-        """
+        """[P, L] participation mask for the round's sampled clients (the
+        shared realization — see
+        :func:`repro.core.resilience.faults.client_dropout_mask`)."""
         if self.fault.client_dropout <= 0:
             return np.ones((self.P, L), bool)
-        rng = self._rng(round_idx, stream=3)
-        alive = rng.random((self.P, L)) >= self.fault.client_dropout
-        dead_rows = ~alive.any(axis=1)
-        if dead_rows.any():
-            survivor = rng.integers(0, L, size=self.P)
-            alive[dead_rows, survivor[dead_rows]] = True
-        return alive
+        from repro.core.resilience.faults import client_dropout_mask
+        return client_dropout_mask(self.seed, round_idx, self.P, L,
+                                   self.fault.client_dropout)
 
     # ---------------------------------------------------------- trajectory
 

@@ -26,10 +26,24 @@ def init_is_state(P: int, K: int) -> ISState:
     return ISState(jnp.ones((P, K)), jnp.zeros((P, K), jnp.int32))
 
 
+_EST_CAP = 1e6   # gradient-norm estimates above this are runaway values
+                 # (clipped so a single inf/overflow cannot zero out every
+                 # other client's probability)
+
+
 def sampling_probs(state: ISState, floor: float = 0.1) -> jax.Array:
-    """[P, K] client-sampling probabilities (sum to 1 per server)."""
-    est = jnp.maximum(state.norm_est, floor * state.norm_est.mean(
-        axis=1, keepdims=True))
+    """[P, K] client-sampling probabilities (sum to 1 per server).
+
+    Robust to degenerate estimates: NaNs are treated as the unit prior,
+    infs are clipped to ``_EST_CAP``, and the exploration floor is lower
+    bounded away from zero so an all-zero row degrades to the uniform
+    distribution instead of 0/0.  Rows are always valid distributions
+    (property-tested in tests/test_sampling.py)."""
+    est = jnp.nan_to_num(state.norm_est, nan=1.0, posinf=_EST_CAP,
+                         neginf=0.0)
+    est = jnp.clip(est, 0.0, _EST_CAP)
+    est = jnp.maximum(est, jnp.maximum(
+        floor * est.mean(axis=1, keepdims=True), 1e-12))
     return est / est.sum(axis=1, keepdims=True)
 
 
@@ -44,9 +58,18 @@ def sample_clients(key: jax.Array, probs: jax.Array, L: int) -> jax.Array:
     return jax.vmap(pick)(jax.random.split(key, P), probs)
 
 
-def importance_weights(probs: jax.Array, idx: jax.Array) -> jax.Array:
-    """[P, L] unbiased reweighting 1/(K pi_k) for the sampled clients."""
-    K = probs.shape[1]
+def importance_weights(probs: jax.Array, idx: jax.Array,
+                       k_norm=None) -> jax.Array:
+    """[P, L] unbiased reweighting 1/(K pi_k) for the sampled clients.
+
+    ``k_norm`` overrides the normalizing population size (scalar or [P]):
+    under an availability trace only K_avail clients are samplable, and the
+    unbiased target is the mean over the *available* population —
+    E[(1/L) sum_i g_{k_i} / (K_avail pi_{k_i})] = (1/K_avail) sum_avail g_k.
+    """
+    K = probs.shape[1] if k_norm is None else k_norm
+    K = jnp.reshape(jnp.asarray(K, probs.dtype), (-1, 1)) \
+        if jnp.ndim(K) == 1 else K
     pi = jnp.take_along_axis(probs, idx, axis=1)
     return 1.0 / (K * jnp.maximum(pi, 1e-9))
 

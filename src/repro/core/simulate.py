@@ -87,24 +87,16 @@ def sample_round_batches(key: jax.Array, prob: LogisticProblem, L: int,
                          batch_size: int):
     """Sample L participating clients per server and a minibatch each.
 
-    Returns pytree (h [P,L,B,M], gamma [P,L,B]).
+    Returns pytree (h [P,L,B,M], gamma [P,L,B]).  Delegates to the
+    population engine's cohort sampler over a dense population — the SAME
+    program the engine runs for lazy populations, which is what makes the
+    dense path and the population path bit-identical by construction
+    (tests/test_population.py).
     """
-    P, K, N, M = prob.features.shape
-    kc, kb = jax.random.split(key)
-    # sampled client indices per server [P, L]
-    def pick_clients(k):
-        return jax.random.choice(k, K, (L,), replace=False)
-    client_idx = jax.vmap(pick_clients)(jax.random.split(kc, P))
-    # minibatch indices per (server, client) [P, L, B]
-    def pick_batch(k):
-        return jax.random.choice(k, N, (batch_size,), replace=False)
-    batch_idx = jax.vmap(pick_batch)(
-        jax.random.split(kb, P * L)).reshape(P, L, batch_size)
-
-    p_idx = jnp.arange(P)[:, None, None]
-    h = prob.features[p_idx, client_idx[:, :, None], batch_idx]      # [P,L,B,M]
-    g = prob.labels[p_idx, client_idx[:, :, None], batch_idx]        # [P,L,B]
-    return (h, g)
+    from repro.core.population import DensePopulation, uniform_cohort_batch
+    return uniform_cohort_batch(
+        key, DensePopulation(prob.features, prob.labels, rho=prob.rho), L,
+        batch_size)
 
 
 def base_combination_matrix(cfg: GFLConfig, P: int) -> np.ndarray:
@@ -124,99 +116,54 @@ def run_gfl(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
     resilience runtime: per-round effective A_i, client dropout, straggler
     servers (see repro.core.resilience).  ``record_gaps=True`` additionally
     returns the per-round ``spectral_gap(A_i)`` trajectory.
+
+    This IS the population engine's pure path over a dense population
+    (one loop implementation; docs/population.md): the cohort is always
+    the paper's uniform draw here — ``cfg.cohort`` schedulers run through
+    :func:`repro.core.population.run_gfl_population`.
     """
+    from repro.core.population import DensePopulation
+    from repro.core.population.cohort import CohortScheduler
+    from repro.core.population.engine import run_gfl_population
     from repro.core.resilience import TopologyProcess
 
     P = prob.features.shape[0]
     if process is None and cfg.fault != "none":
         base = A if A is not None else base_combination_matrix(cfg, P)
         process = TopologyProcess(base, cfg.fault, seed=cfg.topology_seed)
-    if process is not None:
-        step = gfl.make_gfl_step(process, make_grad_fn(prob.rho), cfg)
-    else:
-        if A is None:
-            A = base_combination_matrix(cfg, P)
-        step = gfl.make_gfl_step(jnp.asarray(A), make_grad_fn(prob.rho), cfg)
-    L = cfg.effective_clients
-
-    key = jax.random.PRNGKey(seed)
-    key, k_init = jax.random.split(key)
-    state = gfl.init_state(k_init, P, prob.w_opt.shape[0])
-
-    sample = jax.jit(lambda k: sample_round_batches(k, prob, L, batch_size))
-
-    msd = []
-    for i in range(iters):
-        key, kb = jax.random.split(key)
-        state = step(state, sample(kb))
-        if i % record_every == 0:
-            wc = gfl.centroid(state.params)
-            msd.append(float(jnp.sum((wc - prob.w_opt) ** 2)))
+    pop = DensePopulation.from_problem(prob)
+    scheduler = CohortScheduler(pop.num_clients, cfg.effective_clients, P)
+    res = run_gfl_population(pop, cfg, iters=iters, batch_size=batch_size,
+                             seed=seed, record_every=record_every, A=A,
+                             process=process, scheduler=scheduler)
     if record_gaps:
         from repro.core.topology import spectral_gap
-        gaps = (process.gap_trajectory(iters) if process is not None
-                else np.full(iters, spectral_gap(np.asarray(A))))
-        return np.asarray(msd), state.params, gaps
-    return np.asarray(msd), state.params
+        if process is not None:
+            gaps = process.gap_trajectory(iters)
+        else:
+            base = A if A is not None else base_combination_matrix(cfg, P)
+            gaps = np.full(iters, spectral_gap(np.asarray(base)))
+        return res.msd, res.params, gaps
+    return res.msd, res.params
 
 
 def run_gfl_importance(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
                        batch_size: int = 10, seed: int = 0):
     """GFL with importance-sampled clients ([22],[23]): clients picked with
     probability ~ their running gradient-norm estimate, updates reweighted
-    by 1/(K pi_k) to stay unbiased.  Returns (msd trace, final params)."""
-    from repro.core import sampling as IS
+    by 1/(K pi_k) to stay unbiased.  Returns (msd trace, final params).
 
-    P, K, N, M = prob.features.shape
-    A = jnp.asarray(base_combination_matrix(cfg, P))
-    L = cfg.effective_clients
-    grad_fn = make_grad_fn(prob.rho)
+    One implementation of the weighted round exists — the population
+    engine's (repro.core.population.engine); this wrapper runs it over the
+    dense problem with an ``importance`` cohort scheduler.
+    """
+    from dataclasses import replace as dc_replace
 
-    from repro.core.privacy.mechanism import RoundContext, mechanism_for
+    from repro.core.population import run_gfl_population
 
-    key = jax.random.PRNGKey(seed)
-    key, k_init = jax.random.split(key)
-    state = gfl.init_state(k_init, P, M)
-    is_state = IS.init_is_state(P, K)
-    mech = mechanism_for(cfg)
-
-    @jax.jit
-    def round_fn(params, is_state, key, step):
-        ctx = RoundContext(step=step)
-        k_sel, k_batch, k_priv, k_comb = jax.random.split(key, 4)
-        probs = IS.sampling_probs(is_state)
-        idx = IS.sample_clients(k_sel, probs, L)               # [P, L]
-        w_is = IS.importance_weights(probs, idx)               # [P, L]
-        # minibatches for the selected clients
-        bidx = jax.vmap(lambda k: jax.random.choice(k, N, (batch_size,),
-                                                    replace=False))(
-            jax.random.split(k_batch, P * L)).reshape(P, L, batch_size)
-        p_ix = jnp.arange(P)[:, None, None]
-        h = prob.features[p_ix, idx[:, :, None], bidx]
-        g = prob.labels[p_ix, idx[:, :, None], bidx]
-
-        def one_server(w_p, h_p, g_p, w_row, key_p):
-            def one_client(hb, gb, wgt):
-                grad = grad_fn(w_p, (hb, gb))
-                grad = gfl.clip_to_bound(grad, cfg.grad_bound)
-                return w_p - cfg.mu * wgt * grad, jnp.linalg.norm(grad)
-
-            w_clients, norms = jax.vmap(one_client)(h_p, g_p, w_row)
-            return mech.client_protect(w_clients, key_p, ctx), norms
-
-        psi, norms = jax.vmap(one_server)(
-            params, h, g, w_is, jax.random.split(k_priv, P))
-        new_params = mech.server_combine(psi, k_comb, A, ctx)
-        new_is = IS.update_norm_estimates(is_state, idx, norms)
-        return new_params, new_is
-
-    msd = []
-    for i in range(iters):
-        key, sub = jax.random.split(key)
-        params, is_state = round_fn(state.params, is_state, sub, state.step)
-        state = gfl.GFLState(params, state.step + 1, key)
-        msd.append(float(jnp.sum((gfl.centroid(params) - prob.w_opt) ** 2)))
-    return np.asarray(msd), state.params
+    res = run_gfl_population(prob, dc_replace(cfg, cohort="importance"),
+                             iters=iters, batch_size=batch_size, seed=seed)
+    return res.msd, res.params
 
 
 def run_schemes(key: jax.Array, *, iters: int = 500, sigma_g: float = 0.2,

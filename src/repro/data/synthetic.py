@@ -68,16 +68,23 @@ def make_batch(stream: TokenStream, key, batch: int, seq_len: int) -> dict:
 
 
 def federated_token_batches(stream: TokenStream, seed: int, step: int,
-                            P: int, L: int, per_client: int, seq_len: int
-                            ) -> dict:
+                            P: int, L: int, per_client: int, seq_len: int,
+                            client_ids=None) -> dict:
     """Batch pytree with leading [P, L] dims for :func:`repro.core.gfl.gfl_round`.
 
     Each (server, client) pair gets its own fold_in chain, so client data is
-    disjoint and reproducible."""
+    disjoint and reproducible.  ``client_ids`` ([P, L] ints, optional)
+    names the *population* client behind each cohort slot — a virtual
+    client keeps the same data chain whichever round (and slot) a
+    :class:`~repro.core.population.CohortScheduler` samples it into;
+    the default is the positional identity ``client_ids[p, l] = l``."""
     base = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    if client_ids is not None:
+        client_ids = np.asarray(client_ids)
 
     def client_batch(p, l):
-        k = jax.random.fold_in(jax.random.fold_in(base, p), l)
+        cid = l if client_ids is None else int(client_ids[p, l])
+        k = jax.random.fold_in(jax.random.fold_in(base, p), cid)
         return make_batch(stream, k, per_client, seq_len)
 
     batches = [[client_batch(p, l) for l in range(L)] for p in range(P)]

@@ -286,17 +286,27 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
     """Build the jit-able GFL train step.
 
     params leaves: [P_servers, ...]; batch leaves: [P_servers, L, b, ...].
-    Returns (state, batch[, A, client_alive]) -> (state, metrics).
+    Returns (state, batch[, A, client_alive, cohort_weights]) -> (state,
+    metrics).
 
-    The two trailing arguments are the resilience hooks (both optional;
-    defaults reproduce the static path exactly): ``A`` overrides the base
-    combination matrix with a per-round effective matrix from
+    The trailing arguments are the resilience / population hooks (all
+    optional; defaults reproduce the static path exactly): ``A`` overrides
+    the base combination matrix with a per-round effective matrix from
     :func:`make_topology_process` (dead links become zero-weight entries /
     permutes), and ``client_alive`` ([P, L] mask) applies mid-round client
     dropout — the aggregate renormalizes over survivors, which is exactly
     the dropout-safe secure-agg semantics since the mesh computes the
     aggregate directly (masks cancel; see docs/resilience.md).
-    """
+
+    ``cohort_weights`` ([P, L]) is the population engine's unbiased
+    ``1/(K pi_k)`` cohort reweighting (docs/population.md): each client's
+    gradient is scaled by its weight BEFORE the per-client clip (so the
+    contribution stays inside the grad_bound sensitivity ball the privacy
+    calibration assumes; heavy weights saturate) and before the server
+    mean — a non-uniformly-sampled cohort (importance sampling,
+    availability traces) estimates the population update without bias up
+    to that clipping.  Like the resilience hooks it is a traced runtime
+    argument — one compilation serves every round's cohort."""
     from repro.core.resilience import parse_fault_spec
     from repro.core.resilience.runtime import ensure_dropout_safe
 
@@ -320,15 +330,29 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
 
     acc_dtype = jnp.dtype(gfl.grad_acc_dtype)
 
-    def client_mean_grads(w_p, batch_p, alive_p=None):
+    def client_mean_grads(w_p, batch_p, alive_p=None, weights_p=None):
         """(6)+(7): scan over L clients; per-client clip to B; mean.
 
         ``alive_p`` ([L] 0/1, optional): dropped clients contribute nothing
-        and the mean renormalizes over the survivor count."""
+        and the mean renormalizes over the survivor count.  ``weights_p``
+        ([L], optional): cohort importance weights, applied BEFORE the
+        per-client clip — the clipped contribution stays inside the
+        grad_bound ball the privacy calibration assumes (heavy weights
+        saturate instead of inflating sensitivity), and the mean stays
+        over L — resp. the survivor count — so the 1/(K pi) estimator of
+        docs/population.md is unbiased up to that clipping."""
+        scaled = alive_p is not None or weights_p is not None
+
         def body(acc, xs):
-            client_batch, a = xs if alive_p is not None else (xs, None)
+            if scaled:
+                client_batch, w, a = xs
+            else:
+                client_batch, w, a = xs, None, None
             (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(
                 w_p, client_batch, remat_policy=remat_policy)
+            if w is not None:
+                grads = jax.tree.map(
+                    lambda g: g * w.astype(g.dtype), grads)
             if gfl.grad_bound > 0:
                 grads, _ = clip_by_global_norm(grads, gfl.grad_bound)
             if a is None:
@@ -343,17 +367,22 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
 
         zeros = jax.tree.map(
             lambda p: jnp.zeros(p.shape, acc_dtype), w_p)
-        xs = batch_p if alive_p is None else (batch_p, alive_p)
+        L = jax.tree_util.tree_leaves(batch_p)[0].shape[0]
+        if scaled:
+            a = jnp.ones((L,)) if alive_p is None else alive_p
+            w = jnp.ones((L,)) if weights_p is None else weights_p
+            xs = (batch_p, w, a)
+        else:
+            xs = batch_p
         acc, losses = jax.lax.scan(body, zeros, xs)
         if alive_p is None:
-            L = jax.tree_util.tree_leaves(batch_p)[0].shape[0]
             mean_g = jax.tree.map(lambda c: (c / L).astype(jnp.float32), acc)
             return mean_g, losses.mean()
         n = jnp.maximum(alive_p.sum(), 1.0).astype(acc_dtype)
         mean_g = jax.tree.map(lambda c: (c / n).astype(jnp.float32), acc)
         return mean_g, losses.sum() / n.astype(losses.dtype)
 
-    def client_parallel_grads(params, batch, alive=None):
+    def client_parallel_grads(params, batch, alive=None, weights=None):
         """Small-model mode (§Perf hillclimb 3): ALL (server, client) grads
         computed concurrently — the L client dim is sharded over the
         "model" axis (params are replicated over it), turning the idle TP
@@ -373,6 +402,13 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
         grads = jax.lax.with_sharding_constraint(
             grads, jax.tree.map(
                 lambda g: NamedSharding(mesh, P(da, "model")), grads))
+        if weights is not None:
+            # cohort weights scale BEFORE the per-client clip (sensitivity
+            # stays inside grad_bound — same ordering as client_mean_grads)
+            wf = weights.astype(jnp.float32)
+            grads = jax.tree.map(
+                lambda g: g * wf.reshape(wf.shape + (1,) * (g.ndim - 2)
+                                         ).astype(g.dtype), grads)
         if gfl.grad_bound > 0:
             # per-(server, client) global-norm clip over the param tree
             sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
@@ -383,43 +419,56 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
             grads = jax.tree.map(
                 lambda g: (g * coef.reshape(coef.shape + (1,) * (g.ndim - 2))
                            .astype(g.dtype)), grads)
-        if alive is None:
+        if alive is None and weights is None:
             mean_g = jax.tree.map(
                 lambda g: jnp.mean(g.astype(jnp.float32), axis=1), grads)
             return mean_g, losses.mean(axis=1)
-        w = alive.astype(jnp.float32)                         # [P, L]
-        n = jnp.maximum(w.sum(axis=1), 1.0)                   # [P]
+        a = (jnp.ones(losses.shape, jnp.float32) if alive is None
+             else alive.astype(jnp.float32))                  # [P, L]
+        n = jnp.maximum(a.sum(axis=1), 1.0)                   # [P]
         mean_g = jax.tree.map(
             lambda g: (g.astype(jnp.float32)
-                       * w.reshape(w.shape + (1,) * (g.ndim - 2))
+                       * a.reshape(a.shape + (1,) * (g.ndim - 2))
                        ).sum(axis=1) / n.reshape((-1,) + (1,) * (g.ndim - 2)),
             grads)
-        return mean_g, (losses * w).sum(axis=1) / n
+        return mean_g, (losses * a).sum(axis=1) / n
 
     mech = mechanism_for(gfl)
     profile = mech.noise_profile()
     if fault.client_dropout > 0:
         ensure_dropout_safe(profile, where="mesh client dropout")
 
-    def step_fn(state: TrainState, batch, A_round=None, client_alive=None):
+    def step_fn(state: TrainState, batch, A_round=None, client_alive=None,
+                cohort_weights=None):
         key, k_noise, k_client = jax.random.split(state.key, 3)
         ctx = RoundContext(step=state.step)
         A_rt = Aj if A_round is None else jnp.asarray(A_round, jnp.float32)
-        # the survivor-weighted mean is a DIFFERENT XLA program (different
-        # fusion, ~1-ulp drift), so it is only traced in when the fault
-        # model can actually drop clients — this keeps the zero-probability
-        # resilience path bit-identical to the static path
+        # the survivor-weighted / cohort-weighted mean is a DIFFERENT XLA
+        # program (different fusion, ~1-ulp drift), so each is only traced
+        # in when actually used — this keeps the zero-probability
+        # resilience path and the uniform-cohort path bit-identical to the
+        # static path
         alive = (None if client_alive is None or fault.client_dropout == 0
                  else jnp.asarray(client_alive, jnp.float32))
+        weights = (None if cohort_weights is None
+                   else jnp.asarray(cohort_weights, jnp.float32))
 
         # (6)+(7) per server, vmapped over the sharded server dim
         if gfl.client_parallel:
-            mean_g, loss = client_parallel_grads(state.params, batch, alive)
-        elif alive is None:
+            mean_g, loss = client_parallel_grads(state.params, batch, alive,
+                                                 weights)
+        elif alive is None and weights is None:
             mean_g, loss = jax.vmap(client_mean_grads)(state.params, batch)
-        else:
+        elif weights is None:
             mean_g, loss = jax.vmap(client_mean_grads)(state.params, batch,
                                                        alive)
+        elif alive is None:
+            mean_g, loss = jax.vmap(
+                lambda w_p, b_p, s_p: client_mean_grads(w_p, b_p, None, s_p)
+            )(state.params, batch, weights)
+        else:
+            mean_g, loss = jax.vmap(client_mean_grads)(state.params, batch,
+                                                       alive, weights)
         psi = jax.tree.map(
             lambda w, g: (w.astype(jnp.float32)
                           - gfl.mu * g).astype(w.dtype),

@@ -56,6 +56,15 @@ def main(argv=None):
     ap.add_argument("--fault", default="none",
                     help="resilience fault spec (docs/resilience.md), e.g. "
                          "links:0.1+dropout:0.2")
+    ap.add_argument("--virtual-clients", type=int, default=0,
+                    help="virtual population size K per server; 0 keeps the "
+                         "positional --clients cohort.  With K > 0 a "
+                         "CohortScheduler samples --clients ids per round "
+                         "from the population (docs/population.md) and the "
+                         "accountant reports subsampling-amplified epsilon")
+    ap.add_argument("--cohort", default="uniform",
+                    help="cohort-scheduler spec (docs/population.md), e.g. "
+                         "uniform+trace:diurnal,period=24,min=0.2")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args(argv)
 
@@ -75,11 +84,36 @@ def main(argv=None):
 
     gfl_cfg = GFLConfig(topology="ring", privacy=args.privacy,
                         sigma_g=args.sigma, mu=args.mu, grad_bound=10.0,
-                        combine_impl=args.combine, fault=args.fault)
+                        combine_impl=args.combine, fault=args.fault,
+                        cohort=args.cohort)
     # mechanism-aware: the noise profile picks the curve (eps is inf for
     # a zero-noise config — the honest Theorem-2 answer)
     acc = mechanism_for(gfl_cfg).accountant()
     stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+
+    scheduler = None
+    if args.virtual_clients <= 0 and args.cohort != "uniform":
+        raise SystemExit(
+            "--cohort only takes effect with --virtual-clients > 0 (the "
+            "scheduler samples cohort ids from the virtual population); "
+            "pass --virtual-clients or drop --cohort")
+    if args.virtual_clients > 0:
+        from repro.core.population import CohortScheduler, parse_cohort_spec
+        sampler, floor, trace = parse_cohort_spec(args.cohort)
+        if sampler == "importance":
+            raise SystemExit(
+                "--cohort importance needs per-client gradient-norm "
+                "feedback, which the mesh step does not report; use the "
+                "simulator engine (run_gfl_population) or a uniform "
+                "sampler with a trace")
+        # dropout realizations stay with the topology process below (same
+        # stream constants either way — see CohortScheduler._rng)
+        scheduler = CohortScheduler(
+            args.virtual_clients, args.clients, Pn, sampler=sampler,
+            floor=floor, trace=trace, seed=0)
+        acc.sampling_rate = args.clients / args.virtual_clients
+        print(f"virtual population: K={args.virtual_clients} per server, "
+              f"cohort L={args.clients} ({args.cohort})")
 
     process = (steps_lib.make_topology_process(mesh, gfl_cfg)
                if gfl_cfg.fault != "none" else None)
@@ -88,23 +122,38 @@ def main(argv=None):
         state = steps_lib.init_train_state(model, gfl_cfg, mesh,
                                            jax.random.PRNGKey(0))
         t0 = time.time()
+        sel_key = jax.random.PRNGKey(1234)
         for i in range(args.steps):
+            ids = weights = None
+            q_round = None
+            if scheduler is not None:
+                sel = scheduler.select(jax.random.fold_in(sel_key, i), i)
+                ids, weights, q_round = sel.client_idx, sel.weights, sel.q
             batch = federated_token_batches(
                 stream, seed=0, step=i, P=Pn, L=args.clients,
-                per_client=args.per_client, seq_len=args.seq)
+                per_client=args.per_client, seq_len=args.seq,
+                client_ids=ids)
             if process is not None:
                 real = process.realize(i)
                 alive = (process.client_alive(i, args.clients)
                          if process.fault.client_dropout > 0 else None)
-                state, metrics = step(state, batch, real.A, alive)
+                state, metrics = step(state, batch, real.A, alive,
+                                      cohort_weights=weights)
                 if real.gap != 0.0 and i % max(args.steps // 10, 1) == 0:
                     print(f"  round {i}: spectral gap {real.gap:.3f}")
             else:
-                state, metrics = step(state, batch)
+                state, metrics = step(state, batch, cohort_weights=weights)
+            # one ledger release per protocol round, charged at THIS
+            # round's realized rate (a running mean would under-report the
+            # spend whenever q varies round to round — f(q) is convex-ish
+            # increasing, so per-release rates must be recorded as drawn)
+            eps = acc.advance(1, q=q_round)
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
-                eps = acc.advance(max(args.steps // 10, 1))
+                amp = (f" eps_amp {acc.amplified_epsilon():.2f} "
+                       f"(q~{scheduler.realized_q:.3g})"
+                       if scheduler is not None else "")
                 print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
-                      f"eps {eps:.1f} ({time.time()-t0:.0f}s)")
+                      f"eps {eps:.1f}{amp} ({time.time()-t0:.0f}s)")
     if args.checkpoint:
         save_checkpoint(args.checkpoint,
                         jax.tree.map(lambda x: x[0], state.params),

@@ -1,0 +1,455 @@
+"""Population-scale client engine: lazy populations, cohort scheduling,
+bit-identity with the dense path, subsampling-amplified accounting."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GFLConfig
+from repro.core.population import (
+    CohortScheduler,
+    DensePopulation,
+    DirichletPopulation,
+    SyntheticPopulation,
+    estimate_w_ref,
+    parse_cohort_spec,
+    parse_population_spec,
+    parse_trace_spec,
+    population_from_spec,
+    run_gfl_population,
+    uniform_cohort_batch,
+)
+from repro.core.resilience import TopologyProcess
+from repro.core.simulate import (
+    base_combination_matrix,
+    generate_problem,
+    run_gfl,
+    sample_round_batches,
+)
+from repro.data.partition import dirichlet_partition
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return generate_problem(jax.random.PRNGKey(0), P=4, K=6, N=30, M=2)
+
+
+# ------------------------------------------------- the regression anchor --
+#
+# run_gfl and sample_round_batches now DELEGATE to the population engine,
+# so comparing them against run_gfl_population would be circular.  The
+# reference below re-implements the ORIGINAL pre-engine dense program
+# verbatim (direct fancy-indexing sampler + the run_gfl loop as it stood
+# before the delegation) — the engine must stay bit-identical to THIS,
+# independent of how the production code is wired.
+
+
+def _dense_reference_sample(key, prob, L, batch_size):
+    """The original sample_round_batches body (pre-delegation), verbatim."""
+    P, K, N, M = prob.features.shape
+    kc, kb = jax.random.split(key)
+
+    def pick_clients(k):
+        return jax.random.choice(k, K, (L,), replace=False)
+
+    client_idx = jax.vmap(pick_clients)(jax.random.split(kc, P))
+
+    def pick_batch(k):
+        return jax.random.choice(k, N, (batch_size,), replace=False)
+
+    batch_idx = jax.vmap(pick_batch)(
+        jax.random.split(kb, P * L)).reshape(P, L, batch_size)
+    p_idx = jnp.arange(P)[:, None, None]
+    h = prob.features[p_idx, client_idx[:, :, None], batch_idx]
+    g = prob.labels[p_idx, client_idx[:, :, None], batch_idx]
+    return (h, g)
+
+
+def _dense_reference_run(prob, cfg, *, iters, batch_size, seed):
+    """The original run_gfl loop (pre-delegation), verbatim."""
+    from repro.core import gfl
+    from repro.core.simulate import make_grad_fn
+
+    P = prob.features.shape[0]
+    A = base_combination_matrix(cfg, P)
+    step = gfl.make_gfl_step(jnp.asarray(A), make_grad_fn(prob.rho), cfg)
+    L = cfg.effective_clients
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    state = gfl.init_state(k_init, P, prob.w_opt.shape[0])
+    sample = jax.jit(
+        lambda k: _dense_reference_sample(k, prob, L, batch_size))
+    msd = []
+    for _ in range(iters):
+        key, kb = jax.random.split(key)
+        state = step(state, sample(kb))
+        wc = gfl.centroid(state.params)
+        msd.append(float(jnp.sum((wc - prob.w_opt) ** 2)))
+    return np.asarray(msd), state.params
+
+
+@pytest.mark.parametrize("scheme", ["none", "iid_dp", "hybrid"])
+def test_full_participation_bit_identical(problem, scheme):
+    """THE anchor: the population engine with L = K and an always-available
+    trace reproduces the paper's original dense program bit-for-bit (and
+    run_gfl, which now delegates, still does too)."""
+    cfg = GFLConfig(num_servers=4, clients_per_server=6, privacy=scheme,
+                    sigma_g=0.3, mu=0.1, topology="ring", grad_bound=10.0)
+    msd_ref, par_ref = _dense_reference_run(problem, cfg, iters=6,
+                                            batch_size=5, seed=3)
+    res = run_gfl_population(problem, cfg, iters=6, batch_size=5, seed=3)
+    assert np.array_equal(msd_ref, res.msd)
+    assert np.array_equal(np.asarray(par_ref), np.asarray(res.params))
+    msd_d, par_d = run_gfl(problem, cfg, iters=6, batch_size=5, seed=3)
+    assert np.array_equal(msd_ref, msd_d)
+    assert np.array_equal(np.asarray(par_ref), np.asarray(par_d))
+
+
+def test_subsampled_pure_path_bit_identical(problem):
+    """The pure cohort path (uniform, always-available) is the original
+    dense program at any L, not just full participation."""
+    cfg = GFLConfig(num_servers=4, clients_per_server=6, clients_sampled=3,
+                    privacy="none", mu=0.1, topology="ring")
+    _, par_ref = _dense_reference_run(problem, cfg, iters=5, batch_size=5,
+                                      seed=1)
+    res = run_gfl_population(problem, cfg, iters=5, batch_size=5, seed=1)
+    assert np.array_equal(np.asarray(par_ref), np.asarray(res.params))
+    np.testing.assert_allclose(res.q, 0.5)  # L/K recorded per round
+
+
+def test_sample_round_batches_is_population_gather(problem):
+    """simulate.sample_round_batches, the engine's cohort sampler, and the
+    original fancy-indexing sampler are the same program."""
+    key = jax.random.PRNGKey(9)
+    h0, g0 = _dense_reference_sample(key, problem, 3, 5)
+    h1, g1 = sample_round_batches(key, problem, 3, 5)
+    pop = DensePopulation.from_problem(problem)
+    h2, g2 = uniform_cohort_batch(key, pop, 3, 5)
+    for h, g in ((h1, g1), (h2, g2)):
+        assert np.array_equal(np.asarray(h0), np.asarray(h))
+        assert np.array_equal(np.asarray(g0), np.asarray(g))
+
+
+# ------------------------------------------------------- lazy populations --
+
+
+def test_synthetic_population_deterministic_and_lazy():
+    pop = SyntheticPopulation(3, 10_000, mode="hetero", N=40, M=2,
+                              data_seed=5)
+    h1, g1 = pop.client_shard(1, 9_999)
+    h2, g2 = pop.client_shard(1, 9_999)
+    assert np.array_equal(np.asarray(h1), np.asarray(h2))
+    assert np.array_equal(np.asarray(g1), np.asarray(g2))
+    h3, _ = pop.client_shard(1, 9_998)
+    assert not np.array_equal(np.asarray(h1), np.asarray(h3))
+    # lazy: no [P, K, ...] tensor anywhere on the object
+    assert not any(hasattr(pop, a) for a in ("features", "labels"))
+    # cohort gather materializes exactly [P, L, B, M]
+    idx = jnp.asarray([[0, 42], [9_999, 17], [123, 4_567]])
+    bidx = jnp.tile(jnp.arange(5)[None, None], (3, 2, 1))
+    h, g = pop.gather(idx, bidx)
+    assert h.shape == (3, 2, 5, 2) and g.shape == (3, 2, 5)
+    # the gathered rows are the (server 1, client 9999) shard rows
+    np.testing.assert_array_equal(np.asarray(h[1, 0]), np.asarray(h1[:5]))
+
+
+def test_iid_vs_hetero_sigma():
+    """iid mode uses one global sigma; hetero draws per-client scales."""
+    iid = SyntheticPopulation(1, 50, mode="iid", sigma=1.0, N=400)
+    het = SyntheticPopulation(1, 50, mode="hetero", lo=0.5, hi=1.5, N=400)
+
+    def residual_std(pop, k):
+        h, g = pop.client_shard(0, k)
+        return float(jnp.std(h - g[:, None]))
+
+    iid_stds = [residual_std(iid, k) for k in range(8)]
+    het_stds = [residual_std(het, k) for k in range(8)]
+    assert np.std(iid_stds) < 0.05          # all clients alike
+    assert np.std(het_stds) > 2 * np.std(iid_stds)  # clients differ
+
+
+def test_mixture_cluster_structure():
+    pop = SyntheticPopulation(1, 100, mode="mixture", clusters=4, drift=1.0)
+    m0 = np.asarray(pop._client_mean(jnp.asarray(0)))
+    m4 = np.asarray(pop._client_mean(jnp.asarray(4)))   # same cluster
+    m1 = np.asarray(pop._client_mean(jnp.asarray(1)))   # different cluster
+    np.testing.assert_array_equal(m0, m4)
+    assert np.abs(m0 - m1).max() > 1e-3
+
+
+def test_population_spec_grammar():
+    assert parse_population_spec("dense").kind == "dense"
+    s = parse_population_spec("synthetic:mixture,clusters=8,drift=0.25")
+    assert s.kind == "mixture" and s.args == {"clusters": 8, "drift": 0.25}
+    assert parse_population_spec("dirichlet:0.3").args["alpha"] == 0.3
+    for bad in ("synthetic:what", "dense:x", "nope", "synthetic:iid,x"):
+        with pytest.raises(ValueError):
+            parse_population_spec(bad)
+    cfg = GFLConfig(num_servers=2, clients_per_server=7,
+                    population="synthetic:iid,n=20,dim=3", data_seed=3)
+    pop = population_from_spec(cfg)
+    assert (pop.P, pop.num_clients, pop.samples_per_client, pop.dim) \
+        == (2, 7, 20, 3)
+    with pytest.raises(ValueError):
+        population_from_spec(GFLConfig(population="dense"))
+
+
+def test_estimate_w_ref_recovers_dense_optimum(problem):
+    pop = DensePopulation.from_problem(problem)
+    w = estimate_w_ref(pop, sample_clients=pop.num_clients, iters=3000)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(problem.w_opt),
+                               atol=1e-3)
+
+
+# --------------------------------------------------- dirichlet partition --
+
+
+def test_dirichlet_partition_assigns_every_index_exactly_once():
+    rng = np.random.default_rng(0)
+    for seed in range(4):
+        labels = rng.integers(0, 5, size=237)
+        out = dirichlet_partition(labels, P=3, K=4, alpha=0.2, seed=seed)
+        flat = np.concatenate([a for row in out for a in row])
+        assert len(flat) == len(labels)
+        assert np.array_equal(np.sort(flat), np.arange(len(labels)))
+
+
+def test_dirichlet_partition_min_per_client():
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 2, size=60)
+    out = dirichlet_partition(labels, P=4, K=5, alpha=0.05, seed=2,
+                              min_per_client=2)
+    sizes = [len(a) for row in out for a in row]
+    assert min(sizes) >= 2 and sum(sizes) == 60
+    with pytest.raises(ValueError):
+        dirichlet_partition(labels, P=4, K=5, alpha=0.05, min_per_client=4)
+
+
+def test_dirichlet_partition_skew_tracks_alpha():
+    rng = np.random.default_rng(3)
+    labels = rng.integers(0, 4, size=2000)
+
+    def mean_majority_share(alpha):
+        out = dirichlet_partition(labels, P=2, K=5, alpha=alpha, seed=7)
+        shares = []
+        for row in out:
+            for idx in row:
+                if len(idx) == 0:
+                    continue
+                _, counts = np.unique(labels[idx], return_counts=True)
+                shares.append(counts.max() / counts.sum())
+        return float(np.mean(shares))
+
+    assert mean_majority_share(0.05) > mean_majority_share(100.0) + 0.2
+
+
+def test_dirichlet_population_wiring():
+    pop = DirichletPopulation.synthetic_pool(3, 8, alpha=0.2, pool=600,
+                                             data_seed=1)
+    assert pop.index.shape[:2] == (3, 8)
+    cfg = GFLConfig(num_servers=3, clients_per_server=8, clients_sampled=4,
+                    privacy="none", topology="full")
+    res = run_gfl_population(pop, cfg, iters=4, batch_size=5, seed=0)
+    assert np.isfinite(res.msd).all()
+
+
+# --------------------------------------------------------- cohort scheduling
+
+
+def test_trace_spec_grammar_and_bounds():
+    t = parse_trace_spec("diurnal,period=12,min=0.3")
+    p0 = t.probs(0, 48)
+    assert p0.shape == (48,) and (p0 >= 0.3 - 1e-12).all() \
+        and (p0 <= 1.0 + 1e-12).all()
+    # phases spread clients around the clock: some high, some low
+    assert p0.max() - p0.min() > 0.3
+    d = parse_trace_spec("devclass,slow=0.5,p=0.2")
+    pd = d.probs(0, 1000)
+    assert set(np.unique(pd).tolist()) == {0.2, 1.0}
+    assert 0.3 < (pd == 0.2).mean() < 0.7
+    for bad in ("diurnal,xyz=1", "nope", "devclass,period=3"):
+        with pytest.raises(ValueError):
+            parse_trace_spec(bad)
+
+
+def test_cohort_spec_grammar():
+    assert parse_cohort_spec("uniform")[0] == "uniform"
+    sampler, floor, trace = parse_cohort_spec(
+        "importance,floor=0.25+trace:diurnal,period=6,min=0.1")
+    assert sampler == "importance" and floor == 0.25
+    assert trace.kind == "diurnal" and trace.period == 6
+    with pytest.raises(ValueError):
+        parse_cohort_spec("fancy")
+
+
+def test_scheduler_pure_path_and_q():
+    s = CohortScheduler(K=20, L=5, P=3)
+    assert s.pure
+    sel = s.select(jax.random.PRNGKey(0), 0)
+    assert sel.weights is None and sel.alive is None
+    assert sel.client_idx.shape == (3, 5)
+    assert sel.q == pytest.approx(0.25)
+    # without replacement on the pure path
+    for row in np.asarray(sel.client_idx):
+        assert len(set(row.tolist())) == 5
+
+
+def test_scheduler_availability_deterministic_and_respected():
+    s = CohortScheduler(K=30, L=4, P=2, trace="diurnal,period=8,min=0.1",
+                        seed=11)
+    a1, a2 = s.availability(3), s.availability(3)
+    assert np.array_equal(a1, a2)
+    assert a1.any(axis=1).all()       # forced survivor per server
+    sel = s.select(jax.random.PRNGKey(1), 3)
+    # sampled ids must all be available; weights recorded, q in (0, 1]
+    for p in range(2):
+        assert a1[p, np.asarray(sel.client_idx[p])].all()
+    assert sel.weights is not None and np.isfinite(
+        np.asarray(sel.weights)).all()
+    assert 0 < sel.q <= 1.0
+
+
+def test_scheduler_dropout_matches_topology_process():
+    """Same seed => the scheduler and the resilience process realize the
+    SAME per-round dropout masks (shared stream constants)."""
+    cfg = GFLConfig(num_servers=4, topology="ring", fault="dropout:0.4",
+                    topology_seed=13)
+    s = CohortScheduler(K=50, L=6, P=4, fault="dropout:0.4", seed=13)
+    proc = TopologyProcess(base_combination_matrix(cfg, 4), "dropout:0.4",
+                           seed=13)
+    for i in (0, 3, 17):
+        np.testing.assert_array_equal(s.client_alive(i),
+                                      proc.client_alive(i, 6))
+
+
+def test_importance_scheduler_feedback():
+    s = CohortScheduler(K=12, L=4, P=2, sampler="importance", seed=0)
+    assert not s.pure
+    sel = s.select(jax.random.PRNGKey(2), 0)
+    norms = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (2, 4))) + 5.0
+    before = np.asarray(s.is_state.norm_est).copy()
+    s.observe(sel.client_idx, norms)
+    assert not np.array_equal(before, np.asarray(s.is_state.norm_est))
+    probs = s.effective_probs(np.ones((2, 12), bool))
+    np.testing.assert_allclose(np.asarray(probs.sum(axis=1)), 1.0,
+                               atol=1e-6)
+
+
+# -------------------------------------------------------- engine behavior --
+
+
+def test_weighted_engine_runs_with_everything_on():
+    cfg = GFLConfig(num_servers=4, clients_per_server=50, clients_sampled=5,
+                    privacy="iid_dp", sigma_g=0.1, mu=0.1, topology="ring",
+                    population="synthetic:mixture,clusters=3,drift=0.7",
+                    cohort="importance,floor=0.2+trace:diurnal,period=12,"
+                           "min=0.3",
+                    fault="dropout:0.3")
+    res = run_gfl_population(None, cfg, iters=6, batch_size=5, seed=0)
+    assert np.isfinite(res.msd).all()
+    assert res.q.shape == (6,) and ((res.q > 0) & (res.q <= 1)).all()
+
+
+def test_weighted_engine_rejects_unsafe_dropout_and_stragglers():
+    cfg = GFLConfig(num_servers=3, clients_per_server=20, clients_sampled=4,
+                    privacy="hybrid", sigma_g=0.2, topology="ring",
+                    population="synthetic:iid",
+                    cohort="uniform+trace:devclass",
+                    fault="straggler:0.3,stale=2")
+    with pytest.raises(ValueError, match="straggler"):
+        run_gfl_population(None, cfg, iters=2, batch_size=5, seed=0)
+
+
+def test_scan_executor_matches_streaming_loop():
+    cfg = GFLConfig(num_servers=4, clients_per_server=200,
+                    clients_sampled=5, privacy="none", mu=0.1,
+                    topology="ring", population="synthetic:hetero")
+    res_loop = run_gfl_population(None, cfg, iters=5, batch_size=5, seed=0)
+    res_scan = run_gfl_population(None, cfg, iters=5, batch_size=5, seed=0,
+                                  scan=True)
+    np.testing.assert_allclose(res_loop.msd, res_scan.msd, rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_engine_feeds_amplified_accountant():
+    from repro.core.privacy.mechanism import mechanism_for
+
+    cfg = GFLConfig(num_servers=4, clients_per_server=100,
+                    clients_sampled=5, privacy="hybrid", sigma_g=0.5,
+                    topology="ring", population="synthetic:hetero")
+    res = run_gfl_population(None, cfg, iters=10, batch_size=5, seed=0)
+    acc = mechanism_for(cfg).accountant()
+    acc.advance(10, q=res.scheduler.realized_q)
+    assert acc.amplified_epsilon() < acc.epsilon()
+    assert acc.amplified_epsilon(1.0) == pytest.approx(acc.epsilon())
+
+
+# ----------------------------------------------------- mesh integration ---
+
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_mesh_cohort_weights_runtime_arg():
+    """cohort_weights on the mesh train step: all-ones reproduces the
+    unweighted step, non-uniform weights change it; virtual client ids
+    flow through federated_token_batches."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import GFLConfig
+        from repro.configs.registry import get_config
+        from repro.core.population import CohortScheduler
+        from repro.data import TokenStream, federated_token_batches
+        from repro.launch import steps as S
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import Model
+
+        mesh = make_test_mesh((2, 2), ("data", "model"))
+        cfg = get_config("smollm-135m").reduced()
+        model = Model(cfg)
+        gfl = GFLConfig(topology="ring", privacy="none", mu=0.05,
+                        grad_bound=10.0, combine_impl="dense")
+        stream = TokenStream(vocab=cfg.vocab_size, seed=0)
+        sched = CohortScheduler(1000, 2, 2,
+                                trace="devclass,slow=0.5,p=0.4", seed=0)
+        sel = sched.select(jax.random.PRNGKey(7), 0)
+        with mesh:
+            step = jax.jit(S.make_train_step(model, gfl, mesh))
+            state = S.init_train_state(model, gfl, mesh,
+                                       jax.random.PRNGKey(0))
+            batch = federated_token_batches(stream, 0, 0, P=2, L=2,
+                                            per_client=2, seq_len=16,
+                                            client_ids=sel.client_idx)
+            s_plain, _ = step(state, batch)
+            s_ones, _ = step(state, batch,
+                             cohort_weights=jnp.ones((2, 2)))
+            s_wgt, _ = step(state, batch,
+                            cohort_weights=jnp.asarray([[2.0, 0.5],
+                                                        [1.5, 1.0]]))
+            s_sched, _ = step(state, batch, cohort_weights=sel.weights)
+        t0 = np.asarray(jax.device_get(s_plain.params["embed"]["table"]))
+        t1 = np.asarray(jax.device_get(s_ones.params["embed"]["table"]))
+        t2 = np.asarray(jax.device_get(s_wgt.params["embed"]["table"]))
+        t3 = np.asarray(jax.device_get(s_sched.params["embed"]["table"]))
+        np.testing.assert_allclose(t0, t1, atol=1e-6)
+        assert np.isfinite(t2).all() and np.isfinite(t3).all()
+        # non-uniform weights change the update
+        assert np.abs(t2 - t0).max() > 1e-7
+        print("OK")
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=900,
+                         env=env)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "OK" in out.stdout

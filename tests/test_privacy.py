@@ -129,6 +129,58 @@ def test_accountant_ledger():
     assert epsilon_at(100, 0.1, 10.0, horizon_sigma) == pytest.approx(5.0)
 
 
+def test_amplified_epsilon_q1_pins_to_unamplified():
+    """q = 1 (full participation) reproduces every curve exactly — the
+    amplification ledger is a strict generalization, not a new curve."""
+    lap = PrivacyAccountant(mu=0.1, grad_bound=10.0, sigma_g=0.5)
+    lap.advance(40)
+    assert lap.amplified_epsilon(1.0) == pytest.approx(lap.epsilon(),
+                                                       rel=1e-9)
+    gau = PrivacyAccountant(mu=0.1, grad_bound=10.0, sigma_g=100.0,
+                            curve="gaussian", distribution="gaussian")
+    gau.advance(25)
+    assert gau.amplified_epsilon(1.0) == pytest.approx(gau.epsilon(),
+                                                       rel=1e-9)
+    assert gau.amplified_delta(1.0) == pytest.approx(gau.delta_spent())
+    sch = PrivacyAccountant(mu=0.1, grad_bound=10.0, sigma_g=0.0,
+                            curve="scheduled", horizon=50,
+                            epsilon_target=4.0)
+    sch.advance(50)
+    assert sch.amplified_epsilon(1.0) == pytest.approx(sch.epsilon(),
+                                                       rel=1e-9)
+
+
+def test_amplified_epsilon_subsampling_shrinks_budget():
+    """q < 1 strictly shrinks the composed epsilon (and q-scales delta);
+    realized per-round rates recorded via advance(q=...) are honored."""
+    acc = PrivacyAccountant(mu=0.1, grad_bound=10.0, sigma_g=200.0,
+                            curve="gaussian", distribution="gaussian")
+    acc.advance(10, q=0.1)
+    acc.advance(10, q=0.5)
+    assert 0 < acc.amplified_epsilon() < acc.epsilon()
+    # small-epsilon linear regime: amp(eps, q) ~ q * eps per release
+    per = acc.per_release_epsilon(1)
+    from repro.core.privacy import amplified_release_epsilon
+    assert amplified_release_epsilon(per, 0.01) == pytest.approx(
+        0.01 * per, rel=0.05)
+    assert acc.amplified_delta() == pytest.approx(
+        acc.delta * (10 * 0.1 + 10 * 0.5))
+    # ledger bookkeeping: one q per release
+    assert len(acc.q_history) == acc.step == 20
+    # overflow-guarded large-epsilon branch stays finite and ordered
+    big = amplified_release_epsilon(500.0, 0.25)
+    assert np.isfinite(big) and big == pytest.approx(
+        500.0 + np.log(0.25))
+
+
+def test_amplification_curve_monotone():
+    acc = PrivacyAccountant(mu=0.1, grad_bound=10.0, sigma_g=1.0)
+    curve = acc.amplification_curve(20, q=0.2)
+    eps = [e for _, e in curve]
+    assert all(b > a for a, b in zip(eps, eps[1:]))
+    assert eps[-1] < acc.amplification_curve(20, q=1.0)[-1][1]
+
+
 def test_laplace_variance():
     key = jax.random.PRNGKey(0)
     x = sample_laplace(key, (200_000,), sigma=0.7)

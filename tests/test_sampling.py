@@ -1,0 +1,151 @@
+"""Importance-sampling substrate: distribution validity under degenerate
+norm estimates, and exact unbiasedness of the 1/(K pi) reweighting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core import sampling as IS
+
+
+def _probs(est):
+    est = jnp.asarray(est, jnp.float32)
+    state = IS.ISState(est, jnp.zeros(est.shape, jnp.int32))
+    return np.asarray(IS.sampling_probs(state))
+
+
+def _assert_valid_rows(probs):
+    assert np.isfinite(probs).all()
+    assert (probs >= 0).all()
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, atol=1e-5)
+
+
+# ------------------------------------------------ validity (property) -----
+
+
+@given(P=st.integers(1, 4), K=st.integers(2, 24),
+       seed=st.integers(0, 2**31 - 1),
+       degenerate=st.sampled_from(["none", "zeros", "inf", "nan", "mixed"]))
+@settings(max_examples=40, deadline=None)
+def test_sampling_probs_rows_are_distributions(P, K, seed, degenerate):
+    """Rows of sampling_probs are valid distributions for ARBITRARY norm
+    estimates — including all-zero rows, infs and NaNs (zeros floor to the
+    uniform distribution, infs are clipped, NaNs take the unit prior)."""
+    rng = np.random.default_rng(seed)
+    est = rng.gamma(1.0, 5.0, size=(P, K)).astype(np.float32)
+    if degenerate == "zeros":
+        est[rng.integers(0, P)] = 0.0
+    elif degenerate == "inf":
+        est[rng.integers(0, P), rng.integers(0, K)] = np.inf
+    elif degenerate == "nan":
+        est[rng.integers(0, P), rng.integers(0, K)] = np.nan
+    elif degenerate == "mixed":
+        est[:] = rng.choice([0.0, 1.0, np.inf, np.nan, 1e30],
+                            size=(P, K))
+    _assert_valid_rows(_probs(est))
+
+
+def test_sampling_probs_degenerate_examples():
+    """Example-based pins (run even without hypothesis installed)."""
+    # all-zero row -> uniform
+    p = _probs(np.zeros((2, 5)))
+    _assert_valid_rows(p)
+    np.testing.assert_allclose(p, 0.2, atol=1e-6)
+    # one inf estimate must not zero everyone else out
+    est = np.ones((1, 4))
+    est[0, 0] = np.inf
+    p = _probs(est)
+    _assert_valid_rows(p)
+    assert (p[0, 1:] > 0).all()
+    # NaN estimates fall back to finite probabilities
+    est = np.ones((1, 4))
+    est[0, 2] = np.nan
+    _assert_valid_rows(_probs(est))
+    # healthy estimates keep the proportional behavior
+    p = _probs(np.asarray([[1.0, 3.0]]))
+    assert p[0, 1] == pytest.approx(0.75, rel=1e-5)
+
+
+# --------------------------------------------------- unbiasedness ---------
+
+
+def test_importance_weights_unbiased_exact_expectation():
+    """Sum_k pi_k * x_k * w_k == mean(x) EXACTLY (the [23] estimator): the
+    expectation identity behind the 1/(K pi) reweighting, evaluated in
+    closed form on a toy population."""
+    rng = np.random.default_rng(0)
+    P, K = 3, 16
+    x = rng.normal(size=(P, K))
+    est = rng.gamma(1.0, 2.0, size=(P, K)).astype(np.float32)
+    state = IS.ISState(jnp.asarray(est), jnp.zeros((P, K), jnp.int32))
+    probs = IS.sampling_probs(state)
+    idx = jnp.tile(jnp.arange(K)[None], (P, 1))
+    w = IS.importance_weights(probs, idx)
+    expectation = np.asarray((probs * jnp.asarray(x) * w).sum(axis=1))
+    np.testing.assert_allclose(expectation, x.mean(axis=1), rtol=1e-5)
+
+
+def test_importance_weights_unbiased_monte_carlo():
+    """The sampled estimator (1/L) sum_i x_{k_i} w_{k_i} converges to the
+    population mean over many cohorts."""
+    rng = np.random.default_rng(1)
+    K, L, trials = 12, 4, 4000
+    x = rng.normal(size=(1, K))
+    est = rng.gamma(1.0, 2.0, size=(1, K)).astype(np.float32)
+    state = IS.ISState(jnp.asarray(est), jnp.zeros((1, K), jnp.int32))
+    probs = IS.sampling_probs(state)
+
+    def one(key):
+        idx = IS.sample_clients(key, probs, L)
+        w = IS.importance_weights(probs, idx)
+        return (jnp.asarray(x)[0, idx[0]] * w[0]).mean()
+
+    keys = jax.random.split(jax.random.PRNGKey(2), trials)
+    ests = np.asarray(jax.vmap(one)(keys))
+    assert ests.mean() == pytest.approx(float(x.mean()), abs=0.05)
+
+
+def test_importance_weights_k_norm_targets_available_mean():
+    """With an availability mask, k_norm = K_avail makes the estimator
+    unbiased for the mean over AVAILABLE clients."""
+    rng = np.random.default_rng(2)
+    K = 10
+    x = rng.normal(size=(1, K))
+    avail = np.ones((1, K), bool)
+    avail[0, 7:] = False                      # 7 available
+    base = jnp.full((1, K), 1.0 / K)
+    eff = base * avail
+    eff = eff / eff.sum(axis=1, keepdims=True)
+    idx = jnp.tile(jnp.arange(K)[None], (1, 1))
+    w = IS.importance_weights(eff, idx, k_norm=jnp.asarray([7.0]))
+    expectation = float((eff * jnp.asarray(x) * w).sum())
+    assert expectation == pytest.approx(float(x[0, :7].mean()), rel=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), K=st.integers(2, 20),
+       floor=st.floats(0.01, 0.5))
+@settings(max_examples=25, deadline=None)
+def test_unbiasedness_property(seed, K, floor):
+    """The closed-form expectation identity holds for any estimates/floor."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(1, K))
+    est = rng.gamma(0.7, 3.0, size=(1, K)).astype(np.float32)
+    state = IS.ISState(jnp.asarray(est), jnp.zeros((1, K), jnp.int32))
+    probs = IS.sampling_probs(state, floor=floor)
+    idx = jnp.arange(K)[None]
+    w = IS.importance_weights(probs, idx)
+    expectation = float((probs * jnp.asarray(x) * w).sum())
+    assert expectation == pytest.approx(float(x.mean()), rel=1e-4, abs=1e-6)
+
+
+def test_update_norm_estimates_only_touches_sampled():
+    state = IS.init_is_state(2, 6)
+    idx = jnp.asarray([[0, 2], [5, 5]])
+    norms = jnp.asarray([[4.0, 8.0], [2.0, 2.0]])
+    new = IS.update_norm_estimates(state, idx, norms)
+    est = np.asarray(new.norm_est)
+    assert est[0, 0] != 1.0 and est[0, 2] != 1.0
+    np.testing.assert_array_equal(est[0, [1, 3, 4, 5]], 1.0)
+    assert est[1, 5] != 1.0
