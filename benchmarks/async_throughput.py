@@ -1,0 +1,160 @@
+"""Async-engine benchmark: buffer/staleness sweep at a fixed event budget.
+
+The point of the event-driven executor (repro/core/events/) is that
+dropping the round barrier trades per-round freshness for wall-clock
+throughput: servers aggregate whenever their buffer fills instead of
+waiting for the slowest cohort member.  This sweep makes that measurable —
+at a FIXED candidate-event budget (ticks x P x rate is held constant) it
+runs the scan-compiled executor over a grid of buffer sizes x staleness
+bounds and reports, per configuration,
+
+  * events/sec (folded arrivals per second of the compiled run), and
+  * ticks-to-target-loss: first tick at/below the synchronous engine's
+    median MSD, against the sync engine's own ticks-to-target on the same
+    arrival bandwidth (cohort L = rate per round),
+
+plus the realized release cadence (mean flushes per server).
+
+    PYTHONPATH=src python benchmarks/async_throughput.py            # full
+    PYTHONPATH=src python benchmarks/async_throughput.py --reduced  # CI smoke
+
+Writes the repo-root ``BENCH_async.json`` (the second datapoint of the
+perf trajectory, after BENCH_population.json) and prints ``name,value``
+rows for the harness (benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core.events import parse_async_spec, run_gfl_async
+from repro.core.population import SyntheticPopulation, estimate_w_ref
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_async.json")
+
+BUFFERS = (4, 8, 16)
+STALE_BOUNDS = (2, 4)
+
+
+def ticks_to_target(msd: np.ndarray, target: float) -> int:
+    """First tick index at/below target, or -1 if never reached."""
+    hit = np.nonzero(msd <= target)[0]
+    return int(hit[0]) if hit.size else -1
+
+
+def bench_one(pop, cfg: GFLConfig, spec_str: str, *, ticks: int,
+              batch_size: int, w_ref, target: float) -> dict:
+    spec = parse_async_spec(spec_str)
+    cfg = GFLConfig(**{**cfg.__dict__, "async_spec": spec_str})
+    # warmup compiles the scan program; the timed run reuses it
+    run_gfl_async(pop, cfg, ticks=2, batch_size=batch_size, seed=0,
+                  w_ref=w_ref, scan=True)
+    t0 = time.time()
+    res = run_gfl_async(pop, cfg, ticks=ticks, batch_size=batch_size,
+                        seed=0, w_ref=w_ref, scan=True)
+    jax.block_until_ready(res.params)
+    dt = time.time() - t0
+    events = int(res.events.sum())
+    return {
+        "buffer": spec.buffer, "max_stale": spec.max_stale,
+        "rate": spec.events_per_tick, "ticks": ticks,
+        "events_folded": events,
+        "events_per_sec": events / dt,
+        "seconds": dt,
+        "releases_per_server_mean": float(res.flushed.sum(0).mean()),
+        "mean_staleness": float(res.staleness.mean()),
+        "dropped_stale": int(res.dropped_stale.sum()),
+        "msd_final": float(res.msd[-1]),
+        "ticks_to_target": ticks_to_target(res.msd, target),
+    }
+
+
+def run(quick: bool = False, reduced: bool = False,
+        ticks: int | None = None, P: int = 8, K: int = 400,
+        rate: int = 8, batch_size: int = 10):
+    reduced = bool(quick or reduced)
+    if reduced:
+        P, K, rate = 4, 100, 4
+        ticks = 40 if ticks is None else ticks
+    ticks = 150 if ticks is None else ticks
+    buffers = tuple(max(2, b // 2) for b in BUFFERS) if reduced else BUFFERS
+
+    pop = SyntheticPopulation(P, K, mode="hetero", N=50, M=2, data_seed=0)
+    w_ref = estimate_w_ref(pop, sample_clients=min(32, K), iters=500)
+    base = GFLConfig(num_servers=P, clients_per_server=K,
+                     clients_sampled=rate, topology="ring",
+                     privacy="hybrid", sigma_g=0.05, mu=0.1,
+                     grad_bound=10.0,
+                     cohort="uniform+trace:diurnal,period=12,min=0.4")
+
+    # synchronous baseline on the same arrival bandwidth: the sync-limit
+    # spec (buffer = rate, zero latency) IS run_gfl_population's pure path
+    sync_cfg = GFLConfig(**{**base.__dict__, "cohort": "uniform",
+                            "async_spec": f"async:buffer={rate}"})
+    run_gfl_async(pop, sync_cfg, ticks=2, batch_size=batch_size, seed=0,
+                  w_ref=w_ref, scan=True)
+    t0 = time.time()
+    sync = run_gfl_async(pop, sync_cfg, ticks=ticks, batch_size=batch_size,
+                         seed=0, w_ref=w_ref, scan=True)
+    jax.block_until_ready(sync.params)
+    sync_dt = time.time() - t0
+    target = float(np.median(sync.msd))
+    sync_row = {
+        "events_per_sec": int(sync.events.sum()) / sync_dt,
+        "msd_final": float(sync.msd[-1]),
+        "ticks_to_target": ticks_to_target(sync.msd, target),
+        "target_msd": target, "seconds": sync_dt,
+    }
+
+    rows = [bench_one(pop, base,
+                      f"async:buffer={b},latency=lognorm:0.5,"
+                      f"max_stale={s},rate={rate}",
+                      ticks=ticks, batch_size=batch_size, w_ref=w_ref,
+                      target=target)
+            for b in buffers for s in STALE_BOUNDS]
+    assert len({r["buffer"] for r in rows}) >= 3, \
+        "the sweep must cover >= 3 buffer sizes"
+
+    with open(OUT, "w") as f:
+        json.dump({"benchmark": "async_throughput", "reduced": reduced,
+                   "P": P, "K": K, "rate": rate, "ticks": ticks,
+                   "sync": sync_row, "rows": rows}, f, indent=2)
+        f.write("\n")
+
+    out = [("async_throughput/sync_events_per_sec",
+            sync_row["events_per_sec"]),
+           ("async_throughput/sync_ticks_to_target",
+            sync_row["ticks_to_target"])]
+    for r in rows:
+        tag = f"buf{r['buffer']}_stale{r['max_stale']}"
+        out.append((f"async_throughput/{tag}_events_per_sec",
+                    r["events_per_sec"]))
+        out.append((f"async_throughput/{tag}_ticks_to_target",
+                    float(r["ticks_to_target"])))
+        out.append((f"async_throughput/{tag}_releases_per_server",
+                    r["releases_per_server_mean"]))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke: fewer ticks, smaller P/K/rate (the "
+                         "buffer x staleness grid keeps >= 3 buffer sizes "
+                         "— that is the point)")
+    ap.add_argument("--ticks", type=int, default=None,
+                    help="event batches per config (default: 150 full / "
+                         "40 reduced)")
+    args = ap.parse_args(argv)
+    for name, val in run(reduced=args.reduced, ticks=args.ticks):
+        print(f"{name},{val:.6g}")
+
+
+if __name__ == "__main__":
+    main()

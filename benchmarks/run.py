@@ -18,15 +18,16 @@ def main(argv=None):
                     help="comma-separated bench names")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fault_sweep, fig2_convergence, kernel_bench,
-                            noise_sweep, population_scale, privacy_epsilon,
-                            roofline_report)
+    from benchmarks import (async_throughput, fault_sweep, fig2_convergence,
+                            kernel_bench, noise_sweep, population_scale,
+                            privacy_epsilon, roofline_report)
     benches = {
         "fig2_convergence": fig2_convergence.run,     # paper Fig. 2
         "noise_sweep": noise_sweep.run,               # Fig. 2 right, extended
         "privacy_epsilon": privacy_epsilon.run,       # Theorem 2
         "fault_sweep": fault_sweep.run,               # resilience runtime
         "population_scale": population_scale.run,     # virtual-K engine
+        "async_throughput": async_throughput.run,     # event-driven engine
         "kernel_bench": kernel_bench.run,             # Pallas kernels
         "roofline_report": roofline_report.run,       # deliverable (g)
     }

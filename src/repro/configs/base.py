@@ -220,6 +220,10 @@ class GFLConfig:
                                      # importance[,floor=..] with optional
                                      # "+trace:always|diurnal|devclass[,..]"
                                      # — see docs/population.md
+    async_spec: str = "none"         # event-driven executor spec: none |
+                                     # async[:buffer=..,latency=..,
+                                     # max_stale=..,alpha=..,rate=..] — see
+                                     # repro.core.events and docs/async.md
     data_seed: int = 0               # seed of the lazy population generator
                                      # (client k's shard is a pure function
                                      # of (data_seed, server, client))

@@ -1,0 +1,107 @@
+"""Buffered, staleness-weighted per-server aggregation state.
+
+FedBuff-style semantics: each server folds arriving client contributions
+into a running weighted sum and only runs the protocol's aggregation +
+combination once the buffer holds ``AsyncSpec.buffer`` arrivals.  A
+contribution of age ``a`` (computed against the model ``a`` ticks ago)
+folds with weight
+
+    s(a) = 1 / (1 + a)^alpha                       (nonnegative, s(0) = 1)
+
+and the flushed aggregate is the weight-normalized fold
+
+    psi_p = sum_e s_e x_e / sum_e s_e
+
+— an affine combination of the buffered contributions, so when the ages
+are drawn independently of the updates the fold is unbiased in
+expectation: E[psi] equals the unweighted mean of E[x] (property-tested in
+tests/test_events.py).  At ``alpha = 0`` (or all ages 0) every weight is
+1 and the fold IS the synchronous mean.
+
+The executor composes this with PR 3's importance reweighting: an
+importance-sampled event's ``1/(K pi)`` weight scales its *gradient*
+before the sensitivity clip (exactly the weighted population path), while
+the staleness weight governs the *fold* — the two compose without
+touching the privacy calibration's clipping bound.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def staleness_weights(ages: jax.Array, alpha: float) -> jax.Array:
+    """``1/(1 + age)^alpha`` — nonnegative, 1 at age 0, nonincreasing."""
+    return 1.0 / (1.0 + jnp.asarray(ages, jnp.float32)) ** alpha
+
+
+def weighted_fold(x: jax.Array, weights: jax.Array, axis: int = 0
+                  ) -> jax.Array:
+    """Weight-normalized fold ``sum w x / sum w`` (the unbiased
+    contribution reweighting); zero total weight folds to zero."""
+    w = jnp.asarray(weights, x.dtype)
+    shape = [1] * x.ndim
+    shape[axis] = -1
+    w = w.reshape(shape)
+    wsum = w.sum(axis=axis, keepdims=True)
+    return (w * x).sum(axis=axis) / jnp.maximum(wsum.squeeze(axis), 1e-12)
+
+
+class BufferedServerState(NamedTuple):
+    """Per-server aggregation buffers, traced through the event loop."""
+    buf_sum: jax.Array    # [P, D] staleness-weighted contribution sum
+    buf_wsum: jax.Array   # [P] folded weight mass
+    buf_n: jax.Array      # [P] int32 arrivals since the last flush
+    version: jax.Array    # [P] int32 flush count (the server's own clock)
+    psi_cache: jax.Array  # [P, D] last announced psi (re-announced by
+                          # non-flushing servers during a combine, the
+                          # resilience runtime's straggler semantics)
+
+
+def init_buffers(params: jax.Array) -> BufferedServerState:
+    """Empty buffers; psi_cache seeded with the initial params (the same
+    seeding as ``init_resilient_state``)."""
+    P = params.shape[0]
+    return BufferedServerState(
+        buf_sum=jnp.zeros_like(params),
+        buf_wsum=jnp.zeros((P,), jnp.float32),
+        buf_n=jnp.zeros((P,), jnp.int32),
+        version=jnp.zeros((P,), jnp.int32),
+        psi_cache=params)
+
+
+def fold_tick(buf: BufferedServerState, contrib: jax.Array,
+              wsum: jax.Array, n: jax.Array) -> BufferedServerState:
+    """Fold one tick's per-server protected contribution into the buffers.
+
+    ``contrib`` [P, D] is the tick's staleness-weighted protected mean,
+    ``wsum`` [P] its folded weight mass and ``n`` [P] its valid-arrival
+    count; ticks recombine exactly because the fold is associative in
+    (weighted sum, weight mass) space."""
+    return buf._replace(
+        buf_sum=buf.buf_sum + wsum[:, None] * contrib,
+        buf_wsum=buf.buf_wsum + wsum,
+        buf_n=buf.buf_n + n)
+
+
+def flush(buf: BufferedServerState, buffer_size: int
+          ) -> Tuple[jax.Array, jax.Array, BufferedServerState]:
+    """(flush mask [P], announced psi [P, D], post-flush buffers).
+
+    A server flushes when its buffer holds >= ``buffer_size`` arrivals:
+    its announced psi is the weight-normalized fold and its buffers drain;
+    a non-flushing server re-announces ``psi_cache``.  The whole buffer
+    drains on flush (arrivals beyond ``buffer_size`` in the same tick are
+    consumed, not carried)."""
+    do_flush = buf.buf_n >= buffer_size
+    psi_fold = buf.buf_sum / jnp.maximum(buf.buf_wsum, 1e-12)[:, None]
+    psi = jnp.where(do_flush[:, None], psi_fold, buf.psi_cache)
+    new_buf = BufferedServerState(
+        buf_sum=jnp.where(do_flush[:, None], 0.0, buf.buf_sum),
+        buf_wsum=jnp.where(do_flush, 0.0, buf.buf_wsum),
+        buf_n=jnp.where(do_flush, 0, buf.buf_n),
+        version=buf.version + do_flush.astype(jnp.int32),
+        psi_cache=psi)
+    return do_flush, psi, new_buf

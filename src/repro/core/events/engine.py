@@ -1,0 +1,490 @@
+"""Event-driven async GFL executor: buffered, staleness-weighted rounds.
+
+The synchronous executors (``run_gfl`` / ``run_gfl_population``) assume a
+round barrier — every sampled client reports before any server
+aggregates.  This module drops the barrier (FedBuff-style semi-async):
+clients arrive on their own clocks (:mod:`repro.core.events.queue`, the
+availability traces reused as arrival intensities), each arrival carries
+an AGE (which past model snapshot it was computed against, drawn from the
+``AsyncSpec.latency`` distribution and bounded by ``max_stale``), and each
+server aggregates when **its own buffer fills**, not when a global round
+ends (:mod:`repro.core.events.buffer`).
+
+Per tick the executor
+
+  1. draws the tick's candidate event batch with THE shared cohort-draw
+     program (:func:`~repro.core.population.engine.
+     uniform_cohort_indices`, or with-replacement importance draws that
+     compose PR 3's ``1/(K pi)`` reweighting);
+  2. realizes arrivals (trace intensity thinning) and refuses over-stale
+     ones, computes each surviving event's client update against its stale
+     snapshot, and folds the tick through the privacy mechanism's protect
+     hook as a staleness-weighted protected mean (weights
+     ``1/(1 + age)^alpha``, normalization exact);
+  3. folds the tick into each server's buffer; servers at >= ``buffer``
+     arrivals flush — announce their weighted fold — while the rest
+     re-announce their cached psi (the resilience runtime's straggler
+     re-announcement semantics), and the graph combine (eq. 8) runs
+     whenever at least one server flushed.
+
+**Sync-limit contract** (the regression anchor): with ``buffer == rate``,
+zero latency, ``max_stale = 0`` and a pure cohort (uniform sampler,
+always-on trace), every tick is a lockstep synchronous round, and the
+executor routes through the population engine's EXACT pure-path programs
+(`uniform_cohort_batch` + ``gfl.make_gfl_step``) — trajectories are
+bit-identical to ``run_gfl_population`` by construction, not by parallel
+code (tests/test_events.py).
+
+``run_gfl_async(..., scan=True)`` compiles the whole run as one
+``lax.scan`` over event batches — arrival realizations enter as stacked
+scan inputs, cohorts are gathered lazily inside the body, so throughput
+is independent of the population size K (benchmarks/async_throughput.py).
+
+Privacy: each *flush* is one ledger release of that server; feed the
+result's ``(flushed, q)`` schedule to
+:class:`~repro.core.privacy.accountant.AsyncAccountant` — per-server
+curves at each server's own realized cadence and realized q, with the
+synchronous lockstep schedule pinned to the scalar accountant.  See
+docs/async.md.
+"""
+from __future__ import annotations
+
+from dataclasses import replace as dc_replace
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GFLConfig
+from repro.core import gfl
+from repro.core import sampling as IS
+from repro.core.events.buffer import (
+    BufferedServerState,
+    fold_tick,
+    flush,
+    init_buffers,
+    staleness_weights,
+)
+from repro.core.events.queue import EventQueue, trace_intensity_fn
+from repro.core.events.spec import AsyncSpec, parse_async_spec
+from repro.core.population.cohort import AvailabilityTrace, parse_cohort_spec
+from repro.core.population.engine import (
+    as_population,
+    estimate_w_ref,
+    uniform_cohort_batch,
+    uniform_cohort_indices,
+)
+from repro.core.privacy.mechanism import RoundContext, mechanism_for
+from repro.core.resilience.faults import parse_fault_spec
+from repro.core.resilience.process import TopologyProcess
+from repro.core.resilience.runtime import ensure_dropout_safe
+from repro.core.simulate import base_combination_matrix, make_grad_fn
+
+
+class AsyncState(NamedTuple):
+    """Carry of the event loop."""
+    params: jax.Array            # [P, D] per-server models
+    step: jax.Array              # scalar int32 tick index
+    key: jax.Array               # protocol PRNG key
+    buffers: BufferedServerState
+    hist: jax.Array              # [S+1, P, D] snapshots (hist[0] == params);
+                                 # empty [0, P, D] when max_stale == 0
+
+
+class AsyncRunResult(NamedTuple):
+    """Trajectory and release schedule of one async run."""
+    msd: np.ndarray            # [T] centroid MSD vs w_ref per tick
+    params: jax.Array          # final [P, D]
+    flushed: np.ndarray        # [T, P] bool: which servers released when
+    q: np.ndarray              # [T, P] realized per-flush sampling rate
+    staleness: np.ndarray      # [T, P] mean folded age per tick
+    events: np.ndarray         # [T, P] valid arrivals folded per tick
+    dropped_stale: np.ndarray  # [T, P] arrivals refused at the bound
+    gaps: Optional[np.ndarray]  # [T] realized spectral gaps (fault runs)
+    spec: AsyncSpec
+
+    @property
+    def releases(self) -> np.ndarray:
+        """[P] total releases (flushes) per server."""
+        return self.flushed.sum(axis=0)
+
+
+def _importance_probs(cfg: GFLConfig, P: int, K: int, floor: float,
+                      scheduler=None) -> jax.Array:
+    """[P, K] with-replacement event-identity probabilities for the
+    importance sampler: the scheduler's current norm-estimate state when
+    one is passed (frozen for the run — the scan executor cannot thread
+    host-side norm feedback), else the fresh-state uniform mix."""
+    state = scheduler.is_state if scheduler is not None else \
+        IS.init_is_state(P, K)
+    return IS.sampling_probs(state, floor=floor)
+
+
+def _make_event_tick(pop, cfg: GFLConfig, spec: AsyncSpec, trace, grad_fn,
+                     mech, batch_size: int, probs, w_ref_j):
+    """jit-ready general event tick: (state, kb, valid_u, ages, A_t) ->
+    (state, (msd, flushed, q, mean_age, n_valid, dropped)).
+
+    Static flags select exactly the machinery the spec needs — the same
+    only-trace-it-in discipline as the resilience runtime, so disabled
+    features cost nothing and change no programs."""
+    P, K, N = pop.P, pop.num_clients, pop.samples_per_client
+    E, S, alpha = spec.events_per_tick, spec.max_stale, spec.alpha
+    use_trace = not trace.always_on
+    use_latency = not spec.latency.is_zero
+    use_is = probs is not None
+    use_mask = use_trace or use_latency
+    intensity = trace_intensity_fn(trace, K) if use_trace else None
+    max_pi = float(jnp.max(probs)) if use_is else None
+
+    def tick(state: AsyncState, kb, valid_u, ages, A_t):
+        # -- cohort draw: the shared program (uniform), or with-replacement
+        #    importance draws mirroring the weighted population path
+        if use_is:
+            kc, kb2 = jax.random.split(kb)
+            idx = jax.vmap(
+                lambda k, p: jax.random.choice(k, K, (E,), replace=True,
+                                               p=p)
+            )(jax.random.split(kc, P), probs)
+            bidx = jax.vmap(
+                lambda k: jax.random.choice(k, N, (batch_size,),
+                                            replace=False)
+            )(jax.random.split(kb2, P * E)).reshape(P, E, batch_size)
+        else:
+            idx, bidx = uniform_cohort_indices(kb, P, K, N, E, batch_size)
+        h, g = pop.gather(idx, bidx)
+
+        key, sub = jax.random.split(state.key)
+        ctx = RoundContext(step=state.step)
+        key_round, key_combine = jax.random.split(sub)
+        server_keys = jax.random.split(key_round, P)
+
+        # -- arrivals: intensity thinning + bounded staleness
+        valid = jnp.ones((P, E), bool)
+        if use_trace:
+            valid &= valid_u < intensity(state.step, idx)
+        if use_latency:
+            ok_age = ages <= S
+            dropped = (valid & ~ok_age).sum(axis=1)
+            valid &= ok_age
+            a = jnp.minimum(ages, S)
+        else:
+            dropped = jnp.zeros((P,), jnp.int32)
+            a = jnp.zeros((P, E), jnp.int32)
+        s = staleness_weights(a, alpha) * valid           # [P, E]
+        n_valid = valid.sum(axis=1)                       # [P]
+        wsum = s.sum(axis=1)                              # [P]
+
+        # -- stale model snapshots the arrivals were computed against
+        if S > 0:
+            w_base = state.hist[a, jnp.arange(P)[:, None]]   # [P, E, D]
+        else:
+            w_base = jnp.broadcast_to(
+                state.params[:, None], (P, E, state.params.shape[1]))
+
+        # -- per-event client updates + staleness-weighted protected fold.
+        #    Pre-scaling each update by s_e * n_valid / sum(s) makes the
+        #    mechanism's (masked) survivor MEAN equal the weight-normalized
+        #    fold sum(s x)/sum(s) — the protect hook stays the single
+        #    place noise/masks are injected.
+        if use_latency:
+            scale = s * (n_valid.astype(jnp.float32)
+                         / jnp.maximum(wsum, 1e-12))[:, None]
+        else:
+            scale = None   # all folded weights are 1: the mean IS the fold
+
+        rho = (IS.importance_weights(probs, idx) if use_is
+               else jnp.ones((P, E)))
+
+        def one_server(wb_p, h_p, g_p, rho_p, key_p, valid_p, scale_p):
+            def one_event(w_b, hb, gb, rho_e):
+                grad = grad_fn(w_b, (hb, gb))
+                if use_is:
+                    # importance weight BEFORE the sensitivity clip — the
+                    # weighted population path's calibration-preserving
+                    # composition
+                    step_g = gfl.clip_to_bound(rho_e * grad, cfg.grad_bound)
+                else:
+                    step_g = gfl.clip_to_bound(grad, cfg.grad_bound)
+                return w_b - cfg.mu * step_g
+
+            w_upd = jax.vmap(one_event)(wb_p, h_p, g_p, rho_p)   # [E, D]
+            if scale_p is not None:
+                w_upd = w_upd * scale_p[:, None]
+            if use_mask:
+                return mech.client_protect_masked(w_upd, key_p, valid_p,
+                                                  ctx)
+            return mech.client_protect(w_upd, key_p, ctx)
+
+        contrib = jax.vmap(
+            one_server, in_axes=(0, 0, 0, 0, 0, 0,
+                                 None if scale is None else 0)
+        )(w_base, h, g, rho, server_keys, valid, scale)        # [P, D]
+
+        # -- buffer fold + per-server flush decision
+        buf = fold_tick(state.buffers, contrib, wsum, n_valid)
+        n_at_flush = buf.buf_n
+        do_flush, psi, buf = flush(buf, spec.buffer)
+        if use_is:
+            q_flush = jnp.minimum(1.0, n_at_flush * max_pi)
+        else:
+            q_flush = jnp.minimum(1.0, n_at_flush / K)
+        q_flush = jnp.where(do_flush, q_flush, 0.0)
+
+        # -- graph combine whenever anyone flushed; non-flushing servers
+        #    re-announce their cached psi (straggler semantics)
+        new_params = jax.lax.cond(
+            do_flush.any(),
+            lambda op: mech.server_combine(op[0], op[1], A_t, ctx),
+            lambda op: state.params,
+            (psi, key_combine))
+
+        if S > 0:
+            hist = jnp.concatenate([new_params[None], state.hist[:-1]], 0)
+        else:
+            hist = state.hist
+
+        mean_age = ((a * valid).sum(axis=1)
+                    / jnp.maximum(n_valid, 1)).astype(jnp.float32)
+        msd = jnp.sum((gfl.centroid(new_params) - w_ref_j) ** 2)
+        new_state = AsyncState(new_params, state.step + 1, key, buf, hist)
+        return new_state, (msd, do_flush, q_flush, mean_age, n_valid,
+                           dropped)
+
+    return tick
+
+
+def _init_async_state(key: jax.Array, P: int, dim: int, S: int
+                      ) -> AsyncState:
+    """Same initial draws as ``gfl.init_state`` (bit-compatible), plus
+    empty buffers and the snapshot history seeded with the init params."""
+    base = gfl.init_state(key, P, dim)
+    hist = (jnp.tile(base.params[None], (S + 1, 1, 1)) if S > 0
+            else jnp.zeros((0, P, dim)))
+    return AsyncState(base.params, base.step, base.key,
+                      init_buffers(base.params), hist)
+
+
+def run_gfl_async(source, cfg: GFLConfig, *, ticks: int,
+                  batch_size: int = 10, seed: int = 0,
+                  A: Optional[np.ndarray] = None,
+                  process: Optional[TopologyProcess] = None,
+                  spec: Optional[AsyncSpec] = None,
+                  scheduler=None, w_ref=None, scan: bool = False
+                  ) -> AsyncRunResult:
+    """Run the event-driven GFL executor for ``ticks`` event batches.
+
+    ``source``/``cfg`` follow :func:`~repro.core.population.engine.
+    run_gfl_population`; the async behavior comes from ``cfg.async_spec``
+    (or an explicit ``spec``), arrival intensities from the trace part of
+    ``cfg.cohort``, and link/outage faults from ``cfg.fault`` (per-tick
+    effective A_i).  Straggler and dropout fault components are rejected:
+    buffered aggregation with bounded staleness IS the async model of
+    those regimes.  In the sync limit this function routes through the
+    population engine's exact pure-path programs (module docstring).
+    """
+    if spec is None:
+        spec = parse_async_spec(cfg.async_spec)
+    if spec is None:
+        raise ValueError(
+            "run_gfl_async needs an async spec: set GFLConfig.async_spec "
+            "(e.g. 'async:buffer=8,latency=lognorm:0.5,max_stale=4') or "
+            "pass spec=")
+    if cfg.combine_every != 1:
+        raise ValueError("the event executor combines on flush ticks; "
+                         "combine_every amortization is a synchronous "
+                         "knob — use combine_every=1")
+    fault = parse_fault_spec(cfg.fault)
+    if fault.straggler > 0 or fault.client_dropout > 0:
+        raise ValueError(
+            "async executor models stragglers/dropout through buffered "
+            "aggregation with bounded staleness (latency=/max_stale=); "
+            "drop the straggler:/dropout: fault components (links:/outage: "
+            "compose fine)")
+    sampler, floor, trace = parse_cohort_spec(cfg.cohort)
+
+    pop = as_population(source, cfg)
+    P, K = pop.P, pop.num_clients
+    E = spec.events_per_tick
+    if not 1 <= E <= K:
+        raise ValueError(f"events per tick E={E} not in [1, K={K}] "
+                         "(the per-tick candidate draw is without "
+                         "replacement)")
+    grad_fn = make_grad_fn(pop.rho)
+    if w_ref is None:
+        w_ref = pop.w_ref
+    if w_ref is None:
+        w_ref = estimate_w_ref(pop)
+    w_ref_j = jnp.asarray(w_ref)
+
+    if process is None and cfg.fault != "none":
+        base = A if A is not None else base_combination_matrix(cfg, P)
+        process = TopologyProcess(base, cfg.fault, seed=cfg.topology_seed)
+    if A is None:
+        A = base_combination_matrix(cfg, P)
+    Aj = jnp.asarray(A, jnp.float32)
+
+    mech = mechanism_for(cfg)
+    use_trace = not trace.always_on
+    use_is = sampler == "importance"
+    if use_trace or not spec.latency.is_zero:
+        ensure_dropout_safe(mech.noise_profile(),
+                            where="async event arrivals")
+
+    lockstep = spec.is_sync_limit and not use_trace and not use_is
+    if lockstep and not scan:
+        return _run_lockstep_loop(pop, cfg, Aj, process, grad_fn, spec,
+                                  batch_size, ticks, seed, w_ref_j)
+
+    probs = (_importance_probs(cfg, P, K, floor, scheduler) if use_is
+             else None)
+    tick = _make_event_tick(pop, cfg, spec, trace, grad_fn, mech,
+                            batch_size, probs, w_ref_j)
+    queue = EventQueue(P, spec, seed=cfg.topology_seed)
+    gaps = None
+    if process is not None:
+        gaps = np.asarray([process.realize(t).gap for t in range(ticks)])
+
+    def tick_A(t: int) -> jax.Array:
+        if process is None or process.static:
+            return Aj
+        return jnp.asarray(process.realize(t).A, jnp.float32)
+
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    state = _init_async_state(k_init, P, pop.dim, spec.max_stale)
+
+    if scan:
+        us, ages = queue.realize_horizon(ticks)
+        xs = (jnp.asarray(us), jnp.asarray(ages))
+        if process is not None and not process.static:
+            xs = xs + (jnp.stack([tick_A(t) for t in range(ticks)]),)
+
+        def body(carry, x):
+            loop_key, st = carry
+            loop_key, kb = jax.random.split(loop_key)
+            A_t = x[2] if len(x) > 2 else Aj
+            st, out = tick(st, kb, x[0], x[1], A_t)
+            return (loop_key, st), out
+
+        (_, state), outs = jax.lax.scan(body, (key, state), xs)
+        msd, flushed, q, stale, events, dropped = (np.asarray(o)
+                                                   for o in outs)
+        return AsyncRunResult(msd, state.params, flushed.astype(bool), q,
+                              stale, events, dropped, gaps, spec)
+
+    tick_j = jax.jit(tick)
+    rows = []
+    for t in range(ticks):
+        key, kb = jax.random.split(key)
+        u, ag = queue.realize(t)
+        state, out = tick_j(state, kb, jnp.asarray(u), jnp.asarray(ag),
+                            tick_A(t))
+        rows.append(tuple(np.asarray(o) for o in out))
+    msd, flushed, q, stale, events, dropped = (np.stack(col)
+                                               for col in zip(*rows))
+    return AsyncRunResult(msd, state.params, flushed.astype(bool), q,
+                          stale, events, dropped, gaps, spec)
+
+
+def _run_lockstep_loop(pop, cfg, Aj, process, grad_fn, spec, batch_size,
+                       ticks, seed, w_ref_j) -> AsyncRunResult:
+    """The sync limit: every tick is a lockstep round — run the population
+    engine's EXACT pure-path programs (same sampler jit, same step jit,
+    same key discipline), so trajectories are bit-identical to
+    ``run_gfl_population`` by construction."""
+    P, K = pop.P, pop.num_clients
+    E = spec.buffer
+    step = gfl.make_gfl_step(
+        process if process is not None else Aj, grad_fn, cfg)
+    sample = jax.jit(lambda k: uniform_cohort_batch(k, pop, E, batch_size))
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    state = gfl.init_state(k_init, P, pop.dim)
+    msd = []
+    gaps = [] if process is not None else None
+    for t in range(ticks):
+        key, kb = jax.random.split(key)
+        state = step(state, sample(kb))
+        if gaps is not None:
+            gaps.append(process.realize(t).gap)
+        wc = gfl.centroid(state.params)
+        msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
+    T = ticks
+    return AsyncRunResult(
+        msd=np.asarray(msd), params=state.params,
+        flushed=np.ones((T, P), bool),
+        q=np.full((T, P), min(1.0, E / K)),
+        staleness=np.zeros((T, P), np.float32),
+        events=np.full((T, P), E, np.int32),
+        dropped_stale=np.zeros((T, P), np.int32),
+        gaps=None if gaps is None else np.asarray(gaps), spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# mesh wiring: the event layer as a cohort-weight driver
+# ---------------------------------------------------------------------------
+
+
+class AsyncCohortDriver:
+    """Host-side event layer for the mesh trainer (launch/train.py
+    ``--async``): one training step = one tick, the step's sampled [P, L]
+    cohort are the tick's candidate arrivals.
+
+    Produces the per-step ``cohort_weights`` for
+    ``steps.make_train_step`` — validity-thinned, staleness-weighted and
+    normalized so the mesh's server mean equals the weighted fold — plus
+    the per-server (flushed, q) release schedule the
+    :class:`~repro.core.privacy.accountant.AsyncAccountant` consumes.
+
+    A server's weight row is ZERO until its buffer fills: its clients'
+    data only enters the published model on its flush steps, which is
+    exactly when its ledger is charged — the accounting and the release
+    pattern agree (between flushes the mesh combine only re-mixes
+    already-charged neighbor releases plus noise).  The mesh step can
+    only feed the flush from the current step's batch, so non-flush-step
+    arrivals advance the buffer clock without contributing data — the
+    fully buffered cross-tick fold lives in the simulator executor
+    (docs/async.md).  The availability trace must be applied exactly
+    once: pass a trace here ONLY when no ``CohortScheduler`` already
+    thinned the cohort at sampling time.
+    """
+
+    def __init__(self, spec: AsyncSpec, P: int, L: int, K: int, *,
+                 trace: "AvailabilityTrace | str" = "always", seed: int = 0):
+        from repro.core.population.cohort import parse_trace_spec
+        self.spec = spec
+        self.P, self.L, self.K = P, L, K
+        self.trace = (parse_trace_spec(trace) if isinstance(trace, str)
+                      else trace)
+        # the mesh cohort is the event batch: L slots per server per tick
+        self.queue = EventQueue(P, dc_replace(spec, rate=L), seed=seed)
+        self.buf_n = np.zeros(P, np.int64)
+
+    def step(self, t: int, client_ids: Optional[np.ndarray] = None):
+        """(cohort_weights [P, L] jnp, flushed [P] bool, q [P]) of tick t."""
+        spec = self.spec
+        u, ages = self.queue.realize(t)
+        valid = np.ones((self.P, self.L), bool)
+        if not self.trace.always_on:
+            ids = (np.asarray(client_ids) if client_ids is not None
+                   else np.broadcast_to(np.arange(self.L) % self.K,
+                                        (self.P, self.L)))
+            valid &= u < self.trace.probs(t, self.K)[ids]
+        valid &= ages <= spec.max_stale
+        a = np.minimum(ages, spec.max_stale)
+        s = valid * np.asarray(staleness_weights(a, spec.alpha))
+        self.buf_n += valid.sum(axis=1)
+        # a flush needs a full buffer AND data to release this step (the
+        # mesh step feeds the flush from the current batch only)
+        flushed = (self.buf_n >= spec.buffer) & valid.any(axis=1)
+        self.buf_n[flushed] = 0
+        # release gating: zero weights until the flush — data enters the
+        # model exactly on the steps the ledger is charged for
+        s = s * flushed[:, None]
+        wsum = s.sum(axis=1)
+        weights = s * (self.L / np.maximum(wsum, 1e-12))[:, None]
+        q = np.where(flushed,
+                     np.minimum(1.0, valid.sum(axis=1) / self.K), 0.0)
+        return jnp.asarray(weights, jnp.float32), flushed, q

@@ -1,0 +1,108 @@
+"""Event arrival process: who arrives when, and how stale they are.
+
+An :class:`EventQueue` realizes the per-tick **event batches** the async
+executor consumes.  Time advances in ticks; at tick ``t`` every server has
+``E = AsyncSpec.events_per_tick`` candidate event slots, and slot ``j`` of
+server ``p`` is the global event index ``t * P * E + p * E + j`` — every
+realization below is a pure function of ``(seed, event_idx)``, exactly the
+determinism contract of the resilience runtime's fault draws (one shared
+helper: :func:`repro.core.resilience.faults.fault_stream_rng`).
+
+Per candidate event the queue realizes
+
+  * an **arrival uniform** ``u`` — the event fires iff ``u`` falls below
+    the arriving client's availability intensity.  Intensities are the
+    population engine's :class:`~repro.core.population.cohort.
+    AvailabilityTrace` probabilities reused as per-client arrival rates
+    (diurnal phases, device classes): the same trace that throttled
+    synchronous cohort sampling now throttles the client's own clock.
+  * an **age** — the floor of a :class:`~repro.core.events.spec.
+    LatencySpec` draw: the arriving update was computed against the
+    server's model ``age`` ticks ago.  Ages beyond the staleness bound are
+    refused by the executor (``dropped_stale`` in the run result).
+
+Because client *identity* is drawn inside the compiled step (the cohort
+sampler), the identity-dependent part of the arrival test runs in-graph:
+:func:`trace_intensity_fn` compiles each trace kind to pure jnp arithmetic
+(diurnal is a closed-form wave, devclass a static [K] table), while the
+uniforms and ages realized here enter the step as traced arguments — the
+same host-realization / traced-computation split as ``TopologyProcess``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events.spec import AsyncSpec
+from repro.core.population.cohort import AvailabilityTrace
+from repro.core.resilience.faults import (
+    STREAM_ARRIVAL,
+    STREAM_LATENCY,
+    fault_stream_rng,
+)
+
+
+def trace_intensity_fn(trace: AvailabilityTrace, K: int
+                       ) -> Optional[Callable]:
+    """Compile a trace's availability probabilities to jnp arithmetic.
+
+    Returns ``fn(t, idx) -> probs`` (t a traced scalar tick, idx a traced
+    int array of client ids, probs the per-id arrival intensities), or
+    None for the ``always`` trace (intensity 1 — the executor statically
+    skips the arrival test).  Matches ``AvailabilityTrace.probs`` by
+    construction: same formulas, evaluated per sampled id instead of per
+    population row.
+    """
+    if trace.always_on:
+        return None
+    if trace.kind == "devclass":
+        table = jnp.asarray(trace.probs(0, K), jnp.float32)  # t-independent
+
+        def devclass(t, idx):
+            return table[idx]
+
+        return devclass
+
+    period, lo = trace.period, trace.min_avail
+
+    def diurnal(t, idx):
+        phase = (idx % period) / period
+        wave = 0.5 * (1.0 + jnp.sin(
+            2.0 * jnp.pi * (t / period + phase)))
+        return lo + (1.0 - lo) * wave
+
+    return diurnal
+
+
+class EventQueue:
+    """Deterministic per-tick event-batch realizations.
+
+    ``realize(t)`` returns the tick's ``(arrival uniforms [P, E],
+    ages [P, E])``; ``realize_horizon(T)`` stacks ``T`` ticks into the
+    ``[T, P, E]`` arrays the scan executor consumes as ``xs``.  Both are
+    memo-free pure functions of ``(seed, t)`` — re-running a tick
+    re-realizes identical events, which is what makes async runs
+    reproducible and resumable.
+    """
+
+    def __init__(self, P: int, spec: AsyncSpec, *, seed: int = 0):
+        self.P = P
+        self.spec = spec
+        self.E = spec.events_per_tick
+        self.seed = seed
+
+    def realize(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(arrival uniforms [P, E] float32, ages [P, E] int32) of tick t."""
+        shape = (self.P, self.E)
+        u = fault_stream_rng(self.seed, STREAM_ARRIVAL, t).random(
+            shape).astype(np.float32)
+        ages = self.spec.latency.sample_ages(
+            fault_stream_rng(self.seed, STREAM_LATENCY, t), shape)
+        return u, ages
+
+    def realize_horizon(self, T: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Stacked ([T, P, E] uniforms, [T, P, E] ages) for a whole run."""
+        us, ages = zip(*(self.realize(t) for t in range(T)))
+        return np.stack(us), np.stack(ages)

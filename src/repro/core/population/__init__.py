@@ -4,6 +4,7 @@ from repro.core.population.cohort import (
     AvailabilityTrace,
     CohortScheduler,
     CohortSelection,
+    cohort_to_spec,
     parse_cohort_spec,
     parse_trace_spec,
 )
@@ -13,6 +14,7 @@ from repro.core.population.engine import (
     estimate_w_ref,
     run_gfl_population,
     uniform_cohort_batch,
+    uniform_cohort_indices,
 )
 from repro.core.population.population import (
     ClientPopulation,
@@ -26,9 +28,10 @@ from repro.core.population.population import (
 
 __all__ = [
     "AvailabilityTrace", "CohortScheduler", "CohortSelection",
-    "parse_cohort_spec", "parse_trace_spec",
+    "cohort_to_spec", "parse_cohort_spec", "parse_trace_spec",
     "PopulationRunResult", "as_population", "estimate_w_ref",
     "run_gfl_population", "uniform_cohort_batch",
+    "uniform_cohort_indices",
     "ClientPopulation", "DensePopulation", "DirichletPopulation",
     "PopulationSpec", "SyntheticPopulation", "parse_population_spec",
     "population_from_spec",

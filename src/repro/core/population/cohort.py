@@ -94,6 +94,14 @@ class AvailabilityTrace:
         u = ((k * 2654435761) % (1 << 32)) / float(1 << 32)
         return np.where(u < self.slow_frac, self.slow_p, 1.0)
 
+    def to_spec(self) -> str:
+        """Inverse of :func:`parse_trace_spec` (canonical form)."""
+        if self.kind == "always":
+            return "always"
+        if self.kind == "diurnal":
+            return f"diurnal,period={self.period},min={self.min_avail:g}"
+        return f"devclass,slow={self.slow_frac:g},p={self.slow_p:g}"
+
 
 def parse_trace_spec(spec: str) -> AvailabilityTrace:
     """``always`` | ``diurnal[,period=..][,min=..]`` |
@@ -141,6 +149,21 @@ def parse_cohort_spec(spec: str):
                 raise ValueError(
                     f"unknown argument {a!r} for cohort sampler {name!r}")
     return sampler, floor, trace
+
+
+def cohort_to_spec(sampler: str, floor: float,
+                   trace: AvailabilityTrace) -> str:
+    """Inverse of :func:`parse_cohort_spec` (canonical form): the floor is
+    an importance-sampler knob and is only serialized there."""
+    if sampler == "importance":
+        out = f"importance,floor={floor:g}"
+    elif sampler == "uniform":
+        out = "uniform"
+    else:
+        raise ValueError(f"unknown cohort sampler {sampler!r}")
+    if not trace.always_on:
+        out += "+trace:" + trace.to_spec()
+    return out
 
 
 class CohortSelection(NamedTuple):

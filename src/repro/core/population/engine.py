@@ -59,16 +59,17 @@ from repro.core.simulate import (
 )
 
 
-def uniform_cohort_batch(key: jax.Array, pop: ClientPopulation, L: int,
-                         batch_size: int):
-    """The dense simulator's cohort draw, over any population.
+def uniform_cohort_indices(key: jax.Array, P: int, K: int, N: int, L: int,
+                           batch_size: int):
+    """The dense simulator's cohort index draw: split into (clients,
+    batches), choice WITHOUT replacement per server, per-(server, client)
+    minibatch indices.  Returns (client_idx [P, L], batch_idx [P, L, B]).
 
-    Key discipline and index computation are exactly those of the original
-    ``sample_round_batches`` (which now delegates here): split into
-    (clients, batches), choice WITHOUT replacement per server, per-(server,
-    client) minibatch indices.  Returns (h [P, L, B, M], gamma [P, L, B]).
+    This is THE cohort-draw program — ``uniform_cohort_batch`` (and through
+    it ``simulate.sample_round_batches``) and the event engine's tick
+    sampler all call it, which is what makes their sync limits
+    bit-identical by construction.
     """
-    P, K, N = pop.P, pop.num_clients, pop.samples_per_client
     kc, kb = jax.random.split(key)
 
     def pick_clients(k):
@@ -81,6 +82,20 @@ def uniform_cohort_batch(key: jax.Array, pop: ClientPopulation, L: int,
 
     batch_idx = jax.vmap(pick_batch)(
         jax.random.split(kb, P * L)).reshape(P, L, batch_size)
+    return client_idx, batch_idx
+
+
+def uniform_cohort_batch(key: jax.Array, pop: ClientPopulation, L: int,
+                         batch_size: int):
+    """The dense simulator's cohort draw, over any population.
+
+    Key discipline and index computation are exactly those of the original
+    ``sample_round_batches`` (which now delegates here) — see
+    :func:`uniform_cohort_indices`.  Returns (h [P, L, B, M],
+    gamma [P, L, B]).
+    """
+    client_idx, batch_idx = uniform_cohort_indices(
+        key, pop.P, pop.num_clients, pop.samples_per_client, L, batch_size)
     return pop.gather(client_idx, batch_idx)
 
 
@@ -115,11 +130,18 @@ def estimate_w_ref(pop: ClientPopulation, *, sample_clients: int = 32,
 
 
 class PopulationRunResult(NamedTuple):
-    """Trajectory of one population-engine run."""
+    """Trajectory of one population-engine run.
+
+    ``gaps`` / ``staleness`` surface the resilience runtime's per-round
+    realizations when a fault process drives the run (None otherwise):
+    the realized ``spectral_gap(A_i)`` trajectory and, on the pure path,
+    the per-server straggler psi ages after every round."""
     msd: np.ndarray            # centroid MSD vs w_ref, every record_every
     params: jax.Array          # final [P, D] per-server models
     q: np.ndarray              # realized per-round sampling rate
     scheduler: CohortScheduler  # carries IS state + q ledger for reuse
+    gaps: Optional[np.ndarray] = None       # [iters] realized spectral gaps
+    staleness: Optional[np.ndarray] = None  # [iters, P] straggler psi ages
 
 
 def _make_weighted_round(pop: ClientPopulation, cfg: GFLConfig, grad_fn,
@@ -227,12 +249,13 @@ def run_gfl_population(source, cfg: GFLConfig, *, iters: int,
             q = np.full(iters, L / K)
             scheduler.q_history.extend(q.tolist())
             return PopulationRunResult(np.asarray(msd), params, q, scheduler)
-        msd, params = _run_pure_loop(pop, cfg, A, process, grad_fn, L,
-                                     batch_size, iters, seed, record_every,
-                                     w_ref_j)
+        msd, params, gaps, staleness = _run_pure_loop(
+            pop, cfg, A, process, grad_fn, L, batch_size, iters, seed,
+            record_every, w_ref_j)
         q = np.full(iters, L / K)
         scheduler.q_history.extend(q.tolist())
-        return PopulationRunResult(np.asarray(msd), params, q, scheduler)
+        return PopulationRunResult(np.asarray(msd), params, q, scheduler,
+                                   gaps=gaps, staleness=staleness)
 
     # ------------------------------------------------------- weighted path
     if scan:
@@ -261,12 +284,15 @@ def run_gfl_population(source, cfg: GFLConfig, *, iters: int,
     state = gfl.init_state(k_init, P, pop.dim)
     params = state.params
     msd = []
+    gaps = [] if process is not None else None
     for i in range(iters):
         key, sub = jax.random.split(key)
         k_sel, k_round = jax.random.split(sub)
         sel = scheduler.select(k_sel, i)
         A_r = (jnp.asarray(process.realize(i).A, jnp.float32)
                if process is not None and not process.static else Aj)
+        if gaps is not None:
+            gaps.append(process.realize(i).gap)
         weights = (sel.weights if sel.weights is not None
                    else jnp.ones((P, L)))
         alive = (sel.alive if sel.alive is not None
@@ -279,12 +305,18 @@ def run_gfl_population(source, cfg: GFLConfig, *, iters: int,
             msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
     return PopulationRunResult(np.asarray(msd), params,
                                np.asarray(scheduler.q_history[-iters:]),
-                               scheduler)
+                               scheduler,
+                               gaps=(None if gaps is None
+                                     else np.asarray(gaps)))
 
 
 def _run_pure_loop(pop, cfg, A, process, grad_fn, L, batch_size, iters,
                    seed, record_every, w_ref_j):
-    """The dense simulator's loop verbatim, over the population gather."""
+    """The dense simulator's loop verbatim, over the population gather.
+
+    With a fault process the resilience runtime's per-round realizations
+    are surfaced instead of dropped: returns (msd, params, gaps [iters],
+    staleness [iters, P]); without one, (msd, params, None, None)."""
     if process is not None:
         step = gfl.make_gfl_step(process, grad_fn, cfg)
     else:
@@ -294,13 +326,20 @@ def _run_pure_loop(pop, cfg, A, process, grad_fn, L, batch_size, iters,
     state = gfl.init_state(k_init, pop.P, pop.dim)
     sample = jax.jit(lambda k: uniform_cohort_batch(k, pop, L, batch_size))
     msd = []
+    gaps = [] if process is not None else None
+    ages = [] if process is not None else None
     for i in range(iters):
         key, kb = jax.random.split(key)
         state = step(state, sample(kb))
+        if process is not None:
+            gaps.append(process.realize(i).gap)   # memoized with the step's
+            ages.append(np.asarray(state.psi_age))  # own realization
         if i % record_every == 0:
             wc = gfl.centroid(state.params)
             msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
-    return msd, state.params
+    gaps = None if gaps is None else np.asarray(gaps)
+    ages = None if ages is None else np.stack(ages)
+    return msd, state.params, gaps, ages
 
 
 def _run_pure_scan(pop, cfg, A, grad_fn, L, batch_size, iters, seed,

@@ -155,6 +155,13 @@ class PrivacyMechanism:
         return PrivacyAccountant.from_profile(
             self.noise_profile(), self.cfg.mu, self.cfg.grad_bound)
 
+    def async_accountant(self, P: int):
+        """Per-server ledgers for event-driven (non-lockstep) release
+        schedules — see accountant.AsyncAccountant and docs/async.md."""
+        from repro.core.privacy.accountant import AsyncAccountant
+        return AsyncAccountant.from_profile(
+            self.noise_profile(), self.cfg.mu, self.cfg.grad_bound, P)
+
     # ------------------------------------------------------ flat-vector API
 
     def client_protect(self, w_clients: jax.Array, key: jax.Array,

@@ -48,6 +48,8 @@ STREAM_TOPOLOGY = 1
 STREAM_STRAGGLER = 2
 STREAM_DROPOUT = 3
 STREAM_AVAILABILITY = 4
+STREAM_ARRIVAL = 5    # event engine: per-event arrival uniforms
+STREAM_LATENCY = 6    # event engine: per-event latency/age draws
 
 
 def fault_stream_rng(seed: int, stream: int, round_idx: int

@@ -138,8 +138,8 @@ def run_gfl(prob: LogisticProblem, cfg: GFLConfig, *, iters: int,
                              process=process, scheduler=scheduler)
     if record_gaps:
         from repro.core.topology import spectral_gap
-        if process is not None:
-            gaps = process.gap_trajectory(iters)
+        if res.gaps is not None:     # surfaced by the engine (fault runs)
+            gaps = res.gaps
         else:
             base = A if A is not None else base_combination_matrix(cfg, P)
             gaps = np.full(iters, spectral_gap(np.asarray(base)))

@@ -65,6 +65,11 @@ def main(argv=None):
     ap.add_argument("--cohort", default="uniform",
                     help="cohort-scheduler spec (docs/population.md), e.g. "
                          "uniform+trace:diurnal,period=24,min=0.2")
+    ap.add_argument("--async", dest="async_spec", default="none",
+                    help="event-driven executor spec (docs/async.md), e.g. "
+                         "async:buffer=8,latency=lognorm:0.5,max_stale=4 — "
+                         "drives staleness-weighted cohort weights and "
+                         "per-server release accounting")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args(argv)
 
@@ -85,7 +90,7 @@ def main(argv=None):
     gfl_cfg = GFLConfig(topology="ring", privacy=args.privacy,
                         sigma_g=args.sigma, mu=args.mu, grad_bound=10.0,
                         combine_impl=args.combine, fault=args.fault,
-                        cohort=args.cohort)
+                        cohort=args.cohort, async_spec=args.async_spec)
     # mechanism-aware: the noise profile picks the curve (eps is inf for
     # a zero-noise config — the honest Theorem-2 answer)
     acc = mechanism_for(gfl_cfg).accountant()
@@ -115,6 +120,28 @@ def main(argv=None):
         print(f"virtual population: K={args.virtual_clients} per server, "
               f"cohort L={args.clients} ({args.cohort})")
 
+    async_drv = async_acc = None
+    from repro.core.events import AsyncCohortDriver, parse_async_spec
+    from repro.core.population import parse_cohort_spec
+    async_spec = parse_async_spec(args.async_spec)
+    if async_spec is not None:
+        k_pop = args.virtual_clients or args.clients
+        # the event layer drives the mesh step's cohort-weight path:
+        # per-server buffered release gating with staleness weights, and
+        # the matching per-server release accounting (docs/async.md).
+        # The availability trace is applied exactly once — a scheduler
+        # already thins the cohort at sampling time, so the driver only
+        # applies it when no scheduler is active (which the --cohort
+        # guard above reduces to the always-on trace).
+        trace = ("always" if scheduler is not None
+                 else parse_cohort_spec(args.cohort)[2])
+        async_drv = AsyncCohortDriver(async_spec, Pn, args.clients, k_pop,
+                                      trace=trace, seed=0)
+        async_acc = mechanism_for(gfl_cfg).async_accountant(Pn)
+        print(f"async event layer: {async_spec.to_spec()} "
+              f"(per-server buffered releases, staleness alpha="
+              f"{async_spec.alpha:g})")
+
     process = (steps_lib.make_topology_process(mesh, gfl_cfg)
                if gfl_cfg.fault != "none" else None)
     with mesh:
@@ -129,6 +156,9 @@ def main(argv=None):
             if scheduler is not None:
                 sel = scheduler.select(jax.random.fold_in(sel_key, i), i)
                 ids, weights, q_round = sel.client_idx, sel.weights, sel.q
+            if async_drv is not None:
+                aw, flushed, q_srv = async_drv.step(i, ids)
+                weights = aw if weights is None else weights * aw
             batch = federated_token_batches(
                 stream, seed=0, step=i, P=Pn, L=args.clients,
                 per_client=args.per_client, seq_len=args.seq,
@@ -146,12 +176,23 @@ def main(argv=None):
             # one ledger release per protocol round, charged at THIS
             # round's realized rate (a running mean would under-report the
             # spend whenever q varies round to round — f(q) is convex-ish
-            # increasing, so per-release rates must be recorded as drawn)
-            eps = acc.advance(1, q=q_round)
+            # increasing, so per-release rates must be recorded as drawn).
+            # Under --async a server only releases when its buffer fills:
+            # its own ledger advances on its own cadence.
+            if async_acc is not None:
+                async_acc.record_round(flushed, q_srv)
+                eps = async_acc.epsilon()
+            else:
+                eps = acc.advance(1, q=q_round)
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
                 amp = (f" eps_amp {acc.amplified_epsilon():.2f} "
                        f"(q~{scheduler.realized_q:.3g})"
-                       if scheduler is not None else "")
+                       if scheduler is not None and async_acc is None
+                       else "")
+                if async_acc is not None:
+                    rel = async_acc.releases
+                    amp = (f" eps_amp {async_acc.amplified_epsilon():.2f} "
+                           f"rel {min(rel)}-{max(rel)}")
                 print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                       f"eps {eps:.1f}{amp} ({time.time()-t0:.0f}s)")
     if args.checkpoint:

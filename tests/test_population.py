@@ -376,6 +376,39 @@ def test_scan_executor_matches_streaming_loop():
                                atol=1e-6)
 
 
+def test_engine_surfaces_gap_and_staleness_trajectories(problem):
+    """Fault runs surface the resilience runtime's per-round realizations
+    instead of dropping them: the realized spectral-gap trajectory and
+    (pure path) the per-server straggler psi ages."""
+    cfg = GFLConfig(num_servers=4, clients_per_server=6, privacy="none",
+                    topology="ring",
+                    fault="links:0.2+straggler:0.4,stale=3",
+                    topology_seed=5)
+    res = run_gfl_population(problem, cfg, iters=8, batch_size=5, seed=0)
+    proc = TopologyProcess(base_combination_matrix(cfg, 4), cfg.fault,
+                           seed=5)
+    assert res.gaps is not None and res.gaps.shape == (8,)
+    np.testing.assert_allclose(res.gaps, proc.gap_trajectory(8))
+    assert res.staleness is not None and res.staleness.shape == (8, 4)
+    assert res.staleness.min() >= 0 and res.staleness.max() <= 3
+    assert res.staleness.max() > 0    # stragglers actually aged psi
+    # weighted path surfaces gaps too (no stragglers there)
+    cfg_w = GFLConfig(num_servers=4, clients_per_server=50,
+                      clients_sampled=5, privacy="iid_dp", sigma_g=0.1,
+                      topology="ring", population="synthetic:hetero",
+                      cohort="importance", fault="links:0.2",
+                      topology_seed=5)
+    res_w = run_gfl_population(None, cfg_w, iters=4, batch_size=5, seed=0)
+    assert res_w.gaps is not None and res_w.gaps.shape == (4,)
+    assert res_w.staleness is None
+    # clean runs keep both unset
+    cfg_0 = GFLConfig(num_servers=4, clients_per_server=6, privacy="none",
+                      topology="ring")
+    res_0 = run_gfl_population(problem, cfg_0, iters=3, batch_size=5,
+                               seed=0)
+    assert res_0.gaps is None and res_0.staleness is None
+
+
 def test_engine_feeds_amplified_accountant():
     from repro.core.privacy.mechanism import mechanism_for
 
