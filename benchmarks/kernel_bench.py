@@ -1,21 +1,46 @@
-"""Kernel micro-bench: us/call for each Pallas kernel (interpret mode on CPU
-— numbers are correctness-path timings, NOT TPU performance; the TPU story
-is the §Roofline HBM-traffic analysis) and the jnp oracle for comparison.
+"""Kernel bench: per-kernel us/call + END-TO-END fused-round-pipeline rows.
+
+Per-kernel timings run in interpret mode on CPU — numbers are
+correctness-path timings, NOT TPU performance; the TPU story is the
+analytic HBM-traffic accounting (``launch/roofline.round_pipeline_traffic``)
+that the round rows carry alongside the measured CPU timings.
+
+The round rows compare three realizations of one GFL round
+(clip -> update -> privatize -> fold -> combine) over [P, L, D]:
+
+  unfused_chain  the reference op chain with every stage in its own jit
+                 compartment (forced HBM materialization between stages —
+                 what the pre-kernel mechanism path paid);
+  fused_ref      the SAME one-pass pipeline through the dispatch layer's
+                 jnp backend (``repro.kernels.ops`` with backend="ref"),
+                 one jit — the CPU realization of the fusion;
+  fused_pallas   the Pallas kernels (interpret mode on CPU).
+
+``python benchmarks/kernel_bench.py [--reduced]`` writes repo-root
+``BENCH_kernels.json`` — the kernel-perf trajectory's first datapoint —
+with, per mode, the analytic ref-vs-fused HBM bytes (fused must do <= 1/2
+the round trips of the reference chain) and the measured round speedup
+(unfused_chain / fused_ref).
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.topology import combination_matrix
 from repro.kernels import ops, ref
+from repro.launch.roofline import round_pipeline_traffic
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    out = fn(*args)                       # compile + warmup, exactly once
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -23,7 +48,12 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(quick: bool = False):
+# ---------------------------------------------------------------------------
+# per-kernel micro rows
+# ---------------------------------------------------------------------------
+
+
+def micro_rows(quick: bool = False):
     P, D, L = 16, 8192 if not quick else 2048, 8
     A = jnp.asarray(combination_matrix("ring", P), jnp.float32)
     key = jax.random.PRNGKey(0)
@@ -35,7 +65,7 @@ def run(quick: bool = False):
     seed = jnp.array([7], jnp.uint32)
 
     at = A.T
-    rows = [
+    return [
         ("kernel/graph_combine_us", _time(ops.graph_combine, A, psi, g)),
         ("oracle/graph_combine_us",
          _time(jax.jit(ref.graph_combine_ref), at, psi, g)),
@@ -49,9 +79,163 @@ def run(quick: bool = False):
         ("oracle/clip_accum_us",
          _time(jax.jit(lambda x: ref.clip_accum_ref(x, 1.0)), upd)),
     ]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end round pipeline rows
+# ---------------------------------------------------------------------------
+
+
+def _unfused_chain(A, mode, L, D):
+    """The pre-kernel reference chain, one jit compartment per stage so
+    every intermediate round-trips HBM (what separate XLA dispatches pay).
+    The privatize stage is the REFERENCE mechanism's: threefry pairwise
+    mask streams (``pairwise_masks_vec``) for "mask", the reference
+    Laplace sampler for "laplace" — the in-round cost the
+    ``use_kernels=False`` hybrid / iid_dp client levels actually pay."""
+    from repro.core.privacy.noise import sample_laplace
+    from repro.core.privacy.secure_agg import pairwise_masks_vec
+
+    norms = jax.jit(lambda g: jnp.sqrt(jnp.sum(g * g, axis=-1)))
+    scale = jax.jit(lambda n, b: jnp.minimum(1.0, b / jnp.maximum(n, 1e-12)))
+    update = jax.jit(lambda w, g, c, mu: w[:, None] - mu * c[..., None] * g)
+    mask = jax.jit(lambda u, ks: u + jax.vmap(
+        lambda k: pairwise_masks_vec(k, L, D, 0.3))(ks))
+    lap = jax.jit(lambda u, ks: u + jax.vmap(
+        lambda k: sample_laplace(k, (L, D), 0.3))(ks))
+    fold = jax.jit(lambda u: u.mean(axis=1))
+    combine = jax.jit(lambda A, p, g: ref.graph_combine_ref(A.T, p, g))
+
+    def run(w, grads, keys, gn, bound=10.0, mu=0.1):
+        n = norms(grads)
+        c = scale(n, bound)
+        upd = update(w, grads, c, mu)
+        if mode == "mask":
+            upd = mask(upd, keys)
+        elif mode == "laplace":
+            upd = lap(upd, keys)
+        psi = fold(upd)
+        return combine(A, psi, gn)
+
+    return run
+
+
+def _fused(A, mode, backend, L, D):
+    """One-jit fused pipeline through the dispatch layer — including the
+    mechanism's in-round noise work (seed derivation / reference Laplace
+    draws), mirroring what ``_fused_client_fold`` runs per round."""
+    from repro.core.privacy.noise import sample_laplace
+
+    sigma = 0.0 if mode == "none" else 0.3
+
+    @jax.jit
+    def run(w, grads, keys, gn):
+        seeds = noise = None
+        if mode == "mask":
+            seeds = jax.vmap(
+                lambda k: jax.random.randint(k, (1,), 0, 2**31 - 1)[0]
+            )(keys).astype(jnp.uint32)
+        elif mode == "laplace":
+            noise = jax.vmap(lambda k: sample_laplace(k, (L, D), sigma)
+                             )(keys)
+        psi, _ = ops.round_fold(
+            w, grads, mu=0.1, bound=10.0, mode=mode, sigma=sigma,
+            seeds=seeds, noise=noise, backend=backend)
+        return ops.graph_combine(A, psi, gn, backend=backend)
+
+    return run
+
+
+def round_rows(quick: bool = False):
+    P, L, D = (10, 8, 16384 if not quick else 2048)
+    key = jax.random.PRNGKey(0)
+    A = jnp.asarray(combination_matrix("ring", P), jnp.float32)
+    w = jax.random.normal(key, (P, D))
+    grads = jax.random.normal(jax.random.fold_in(key, 1), (P, L, D))
+    gn = jax.random.normal(jax.random.fold_in(key, 3), (P, D)) * 0.3
+    keys = jax.random.split(jax.random.fold_in(key, 4), P)
+
+    rows, report = [], []
+    for mode in ("mask", "laplace"):
+        chain = _unfused_chain(A, mode, L, D)
+        t_chain = _time(chain, w, grads, keys, gn, iters=10)
+        t_ref = _time(_fused(A, mode, "ref", L, D), w, grads, keys, gn,
+                      iters=10)
+        t_pal = _time(_fused(A, mode, "pallas", L, D), w, grads, keys,
+                      gn, iters=3)
+        ref_b = round_pipeline_traffic(P, L, D, mode=mode, fused=False)
+        fus_b = round_pipeline_traffic(P, L, D, mode=mode, fused=True)
+        ratio = fus_b["total"] / ref_b["total"]
+        # gradient-scale HBM round trips — the model-scale headline (the
+        # [P, D]-order terms in the byte ratio vanish as D grows)
+        trips = fus_b["pld_passes"] / ref_b["pld_passes"]
+        speedup = t_chain / t_ref
+        rows += [
+            (f"round/{mode}/unfused_chain_us", t_chain),
+            (f"round/{mode}/fused_ref_us", t_ref),
+            (f"round/{mode}/fused_pallas_us", t_pal),
+            (f"round/{mode}/hbm_ratio", ratio),
+            (f"round/{mode}/roundtrip_ratio", trips),
+            (f"round/{mode}/speedup", speedup),
+        ]
+        report.append({
+            "name": "round_pipeline", "mode": mode, "P": P, "L": L, "D": D,
+            "ref_hbm_bytes": ref_b["total"],
+            "fused_hbm_bytes": fus_b["total"],
+            "hbm_ratio": ratio,
+            "ref_pld_passes": ref_b["pld_passes"],
+            "fused_pld_passes": fus_b["pld_passes"],
+            "roundtrip_ratio": trips,
+            "ref_hbm_terms": ref_b, "fused_hbm_terms": fus_b,
+            "unfused_chain_us": t_chain, "fused_ref_us": t_ref,
+            "fused_pallas_us": t_pal, "round_speedup": speedup,
+        })
+    return rows, report
+
+
+def run(quick: bool = False):
+    """benchmarks/run.py entry: per-kernel micro rows (see ``run_round``
+    for the end-to-end pipeline rows)."""
+    return micro_rows(quick)
+
+
+def run_round(quick: bool = False):
+    """benchmarks/run.py entry: fused-round-pipeline rows; also refreshes
+    repo-root BENCH_kernels.json."""
+    rows, report = round_rows(quick)
+    _write_json(report, reduced=quick)
     return rows
 
 
-if __name__ == "__main__":
-    for name, val in run():
+def _write_json(report, reduced: bool):
+    payload = {
+        "bench": "kernel_round_pipeline",
+        "backend": jax.default_backend(),
+        "reduced": bool(reduced),
+        "note": ("CPU timings run the Pallas kernels in interpret mode "
+                 "(correctness path); hbm_ratio is the analytic TPU "
+                 "round-trip accounting from launch/roofline.py"),
+        "rows": report,
+    }
+    out = REPO_ROOT / "BENCH_kernels.json"
+    out.write_text(json.dumps(payload, indent=1) + "\n")
+    return out
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke sizes (CI)")
+    args = ap.parse_args(argv)
+    for name, val in micro_rows(quick=args.reduced):
         print(f"{name},{val:.1f}")
+    rows, report = round_rows(quick=args.reduced)
+    for name, val in rows:
+        print(f"{name},{val:.4g}")
+    out = _write_json(report, reduced=args.reduced)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

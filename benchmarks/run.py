@@ -29,6 +29,8 @@ def main(argv=None):
         "population_scale": population_scale.run,     # virtual-K engine
         "async_throughput": async_throughput.run,     # event-driven engine
         "kernel_bench": kernel_bench.run,             # Pallas kernels
+        "kernel_round": kernel_bench.run_round,       # fused round pipeline
+                                                      # (writes BENCH_kernels)
         "roofline_report": roofline_report.run,       # deliverable (g)
     }
     if args.only:

@@ -241,7 +241,11 @@ class GFLConfig:
     secure_agg: bool = True          # pairwise-mask SMC at client level
     combine_impl: str = "dense"      # dense (einsum/all-gather) | rotate | sparse
     combine_every: int = 1           # beyond-paper: combine every tau steps
-    use_kernels: bool = False        # route combine/secure-agg through Pallas kernels
+    use_kernels: bool = False        # whole-run switch: route the round
+                                     # (fused clip->update->privatize->fold
+                                     # + graph combine) through the Pallas
+                                     # kernel layer in every engine — see
+                                     # repro.kernels.ops / docs/kernels.md
     # --- beyond-paper perf knobs (see EXPERIMENTS.md §Perf) ---
     combine_wire: str = "bf16"       # bf16: barrier pins the permute buffer to
                                      # param dtype; f32: let XLA hoist converts

@@ -86,7 +86,8 @@ def fold_tick(buf: BufferedServerState, contrib: jax.Array,
         buf_n=buf.buf_n + n)
 
 
-def flush(buf: BufferedServerState, buffer_size: int
+def flush(buf: BufferedServerState, buffer_size: int, *,
+          select: bool = True
           ) -> Tuple[jax.Array, jax.Array, BufferedServerState]:
     """(flush mask [P], announced psi [P, D], post-flush buffers).
 
@@ -94,7 +95,13 @@ def flush(buf: BufferedServerState, buffer_size: int
     its announced psi is the weight-normalized fold and its buffers drain;
     a non-flushing server re-announces ``psi_cache``.  The whole buffer
     drains on flush (arrivals beyond ``buffer_size`` in the same tick are
-    consumed, not carried)."""
+    consumed, not carried).
+
+    ``select=False`` returns the RAW fold instead of the re-announce
+    select (``psi_cache`` in the returned state is still the selected
+    value): the fused graph-combine kernel performs the select in-VMEM
+    from ``(fold, old cache, flush mask)`` — see
+    :func:`repro.kernels.ops.graph_combine`."""
     do_flush = buf.buf_n >= buffer_size
     psi_fold = buf.buf_sum / jnp.maximum(buf.buf_wsum, 1e-12)[:, None]
     psi = jnp.where(do_flush[:, None], psi_fold, buf.psi_cache)
@@ -104,4 +111,4 @@ def flush(buf: BufferedServerState, buffer_size: int
         buf_n=jnp.where(do_flush, 0, buf.buf_n),
         version=buf.version + do_flush.astype(jnp.int32),
         psi_cache=psi)
-    return do_flush, psi, new_buf
+    return do_flush, (psi if select else psi_fold), new_buf

@@ -197,6 +197,30 @@ def _make_event_tick(pop, cfg: GFLConfig, spec: AsyncSpec, trace, grad_fn,
         rho = (IS.importance_weights(probs, idx) if use_is
                else jnp.ones((P, E)))
 
+        if cfg.use_kernels and mech.fold_spec(ctx) is not None:
+            # fused round-fold kernel over the tick's event batch: stale
+            # per-event bases, importance weights pre-clip, staleness
+            # weights as fold weights (weight-normalized), noise/masks at
+            # the survivor mean — the buffered ``weighted_fold`` computed
+            # in one two-pass stream over [P, E, D]
+            grads = jax.vmap(lambda wb_p, h_p, g_p: jax.vmap(
+                lambda w_b, hb, gb: grad_fn(w_b, (hb, gb)))(wb_p, h_p, g_p)
+            )(w_base, h, g)
+            if use_mask:
+                fold_w = s
+                noise_w = (valid.astype(jnp.float32)
+                           / jnp.maximum(n_valid, 1)[:, None])
+            else:
+                fold_w = noise_w = None
+            # at S == 0 every event's base is the live model: hand the
+            # kernel the [P, D] params and let it broadcast in-VMEM
+            contrib, _ = gfl._fused_client_fold(
+                state.params if S == 0 else w_base, grads, server_keys,
+                cfg, mech, ctx, pre_w=rho if use_is else None,
+                fold_w=fold_w, noise_w=noise_w)
+            return _post_fold(state, contrib, key, key_combine, wsum,
+                              n_valid, a, valid, dropped, A_t, ctx)
+
         def one_server(wb_p, h_p, g_p, rho_p, key_p, valid_p, scale_p):
             def one_event(w_b, hb, gb, rho_e):
                 grad = grad_fn(w_b, (hb, gb))
@@ -221,11 +245,27 @@ def _make_event_tick(pop, cfg: GFLConfig, spec: AsyncSpec, trace, grad_fn,
             one_server, in_axes=(0, 0, 0, 0, 0, 0,
                                  None if scale is None else 0)
         )(w_base, h, g, rho, server_keys, valid, scale)        # [P, D]
+        return _post_fold(state, contrib, key, key_combine, wsum, n_valid,
+                          a, valid, dropped, A_t, ctx)
 
-        # -- buffer fold + per-server flush decision
+    def _post_fold(state, contrib, key, key_combine, wsum, n_valid, a,
+                   valid, dropped, A_t, ctx):
+        """Buffer fold, per-server flush, gated graph combine, snapshots."""
         buf = fold_tick(state.buffers, contrib, wsum, n_valid)
         n_at_flush = buf.buf_n
-        do_flush, psi, buf = flush(buf, spec.buffer)
+        if cfg.use_kernels:
+            # fused cached-psi re-announce: the combine kernel selects
+            # fold-vs-cache per server in VMEM (no separate [P, D] pass)
+            cache = state.buffers.psi_cache
+            do_flush, psi_fold, buf = flush(buf, spec.buffer, select=False)
+            combine_op = (psi_fold, key_combine, cache,
+                          do_flush.astype(jnp.float32))
+            combine = lambda op: mech.server_combine(
+                op[0], op[1], A_t, ctx, cache=op[2], gate=op[3])
+        else:
+            do_flush, psi, buf = flush(buf, spec.buffer)
+            combine_op = (psi, key_combine)
+            combine = lambda op: mech.server_combine(op[0], op[1], A_t, ctx)
         if use_is:
             q_flush = jnp.minimum(1.0, n_at_flush * max_pi)
         else:
@@ -235,10 +275,7 @@ def _make_event_tick(pop, cfg: GFLConfig, spec: AsyncSpec, trace, grad_fn,
         # -- graph combine whenever anyone flushed; non-flushing servers
         #    re-announce their cached psi (straggler semantics)
         new_params = jax.lax.cond(
-            do_flush.any(),
-            lambda op: mech.server_combine(op[0], op[1], A_t, ctx),
-            lambda op: state.params,
-            (psi, key_combine))
+            do_flush.any(), combine, lambda op: state.params, combine_op)
 
         if S > 0:
             hist = jnp.concatenate([new_params[None], state.hist[:-1]], 0)

@@ -68,13 +68,81 @@ def server_combine(psi: jax.Array, key: jax.Array, A: jax.Array,
     return mech.server_combine(psi, key, A, ctx)
 
 
+def _fused_client_fold(w, grads, server_keys, cfg: GFLConfig, mech, ctx, *,
+                       pre_w=None, fold_w=None, noise_w=None):
+    """(6)+(7) through the fused round-fold kernel, or None when the fused
+    path doesn't apply (``use_kernels`` off, or the mechanism's client
+    level has no static :meth:`~repro.core.privacy.mechanism.
+    PrivacyMechanism.fold_spec`).
+
+    ``w``: [P, D] base models or [P, L, D] per-client stale bases;
+    ``grads``: [P, L, D] raw per-client gradients; ``pre_w`` [P, L]
+    importance weights (applied BEFORE the sensitivity clip), ``fold_w``
+    unnormalized fold weights (staleness x alive), ``noise_w`` per-client
+    noise/mask fold weight (None -> uniform 1/L).  Returns (psi [P, D],
+    sq [P, L] raw squared grad norms) — this is THE call the dense round,
+    the population executor and the event engine share; backend dispatch
+    (ref-jnp vs Pallas, auto-interpret on CPU) lives in
+    :mod:`repro.kernels.ops` (docs/kernels.md).
+    """
+    if not cfg.use_kernels:
+        return None
+    spec = mech.fold_spec(ctx)
+    if spec is None:
+        return None
+    from repro.core.privacy.noise import get_sampler
+    from repro.kernels import ops as kops
+    P, L, D = grads.shape
+    seeds = noise = None
+    if spec.mode == "mask":
+        seeds = jax.vmap(
+            lambda k: jax.random.randint(k, (1,), 0, 2**31 - 1)[0]
+        )(server_keys).astype(jnp.uint32)
+    elif spec.mode == "laplace":
+        # the reference sampler on the same per-server keys: identical
+        # draws to the client_protect path, streamed once by the kernel
+        noise = jax.vmap(
+            lambda k: get_sampler("laplace")(k, (L, D), spec.sigma,
+                                             grads.dtype)
+        )(server_keys)
+    return kops.round_fold(w, grads, mu=cfg.mu, bound=cfg.grad_bound,
+                           pre_w=pre_w, fold_w=fold_w, noise_w=noise_w,
+                           mode=spec.mode, sigma=spec.sigma, seeds=seeds,
+                           noise=noise)
+
+
+def _client_grads(params, batch, grad_fn):
+    """Raw per-client gradients [P, L, D] (the fused kernel's input)."""
+    return jax.vmap(lambda w_p, b_p: jax.vmap(
+        lambda cb: grad_fn(w_p, cb))(b_p))(params, batch)
+
+
+def _survivor_weights(alive):
+    """(fold_w, noise_w) for a [P, L] participation mask: survivors fold
+    uniformly and the noise/mask term enters at the survivor mean (the
+    dropout-safe semantics of docs/resilience.md).  None -> (None, None),
+    the all-alive uniform fold."""
+    if alive is None:
+        return None, None
+    af = alive.astype(jnp.float32)
+    return af, af / jnp.maximum(af.sum(axis=1, keepdims=True), 1.0)
+
+
 def _client_updates(params, batch, server_keys, grad_fn, cfg, mech, ctx,
                     alive=None):
     """(6)+(7): per-server client updates and protected aggregation.
 
     ``alive`` ([P, L] bool, optional) marks the clients that survived the
     round; when given, aggregation routes through the mechanism's
-    dropout-safe ``client_protect_masked`` hook."""
+    dropout-safe ``client_protect_masked`` hook.  With ``cfg.use_kernels``
+    the whole pass runs as one fused round-fold kernel call."""
+    if cfg.use_kernels and mech.fold_spec(ctx) is not None:
+        grads = _client_grads(params, batch, grad_fn)
+        fold_w, noise_w = _survivor_weights(alive)
+        psi, _ = _fused_client_fold(params, grads, server_keys, cfg, mech,
+                                    ctx, fold_w=fold_w, noise_w=noise_w)
+        return psi
+
     def updates(w_p, batch_p):
         def one_client(client_batch):
             g = grad_fn(w_p, client_batch)

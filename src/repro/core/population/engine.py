@@ -161,6 +161,37 @@ def _make_weighted_round(pop: ClientPopulation, cfg: GFLConfig, grad_fn,
         )(jax.random.split(k_batch, P * L)).reshape(P, L, batch_size)
         h, g = pop.gather(idx, bidx)
 
+        if cfg.use_kernels and mech.fold_spec(ctx) is not None:
+            # fused round-fold kernel: importance weights pre-clip, alive
+            # masks as fold weights, noise/masks at the survivor mean —
+            # one two-pass stream over the [P, L, D] gradients
+            grads = gfl._client_grads(params, (h, g), grad_fn)
+            fold_w, noise_w = gfl._survivor_weights(
+                alive if use_alive else None)
+            psi, sq = gfl._fused_client_fold(
+                params, grads, jax.random.split(k_priv, P), cfg, mech, ctx,
+                pre_w=weights, fold_w=fold_w, noise_w=noise_w)
+            # sampler feedback: the unweighted clipped norm, derived from
+            # the kernel's norms pass (no extra HBM sweep)
+            norms = jnp.sqrt(sq)
+            if cfg.grad_bound > 0:
+                norms = jnp.minimum(cfg.grad_bound, norms)
+        else:
+            psi, norms = _ref_round(params, h, g, weights, alive, k_priv,
+                                    ctx)
+        if tau > 1:
+            do_combine = step_i % tau == tau - 1
+            new_params = jax.lax.cond(
+                do_combine,
+                lambda p: mech.server_combine(p, k_comb, A_r, ctx),
+                lambda p: p, psi)
+        else:
+            new_params = mech.server_combine(psi, k_comb, A_r, ctx)
+        return new_params, norms
+
+    def _ref_round(params, h, g, weights, alive, k_priv, ctx):
+        P, L = weights.shape
+
         def one_server(w_p, h_p, g_p, w_row, key_p, alive_p):
             def one_client(hb, gb, wgt):
                 grad = grad_fn(w_p, (hb, gb))
@@ -182,18 +213,10 @@ def _make_weighted_round(pop: ClientPopulation, cfg: GFLConfig, grad_fn,
                 psi = mech.client_protect(w_clients, key_p, ctx)
             return psi, norms
 
-        alive_arg = alive if use_alive else jnp.ones_like(idx, jnp.bool_)
-        psi, norms = jax.vmap(one_server)(
+        alive_arg = (alive if use_alive
+                     else jnp.ones(weights.shape, jnp.bool_))
+        return jax.vmap(one_server)(
             params, h, g, weights, jax.random.split(k_priv, P), alive_arg)
-        if tau > 1:
-            do_combine = step_i % tau == tau - 1
-            new_params = jax.lax.cond(
-                do_combine,
-                lambda p: mech.server_combine(p, k_comb, A_r, ctx),
-                lambda p: p, psi)
-        else:
-            new_params = mech.server_combine(psi, k_comb, A_r, ctx)
-        return new_params, norms
 
     return round_fn
 

@@ -28,15 +28,25 @@ mechanism, spec ``"scheduled:<inner>"``, scaling sigma per-step from
 ``GFLConfig.epsilon_target`` so the budget is hit exactly at
 ``GFLConfig.epsilon_horizon``).
 
-Backend selection (reference jnp vs Pallas kernels, ``cfg.use_kernels``)
-happens INSIDE each mechanism; call sites never branch on it.  Adding a
-scheme is ~15 lines: subclass, override the hooks you need, decorate with
+``cfg.use_kernels`` is a WHOLE-RUN switch: the engines route the fused
+round-fold kernel (clip -> update -> privatize -> fold, docs/kernels.md)
+through the backend-dispatch layer in :mod:`repro.kernels.ops` whenever a
+mechanism declares a fusible client level via :meth:`~PrivacyMechanism.
+fold_spec`, and every server level with CANCELLING noise structure (the
+``none``/hybrid families) routes through the fused graph-combine kernel —
+``iid_dp``'s non-cancelling per-edge noise keeps the reference einsum,
+which cannot map onto the eq.-24 identity.  Mechanisms whose noise
+cannot be expressed as a
+fold-time term (or whose sigma is traced, e.g. ``scheduled`` inside jit)
+return ``fold_spec() = None`` and fall back to the reference hooks — call
+sites still never branch on the scheme name.  Adding a scheme is ~15
+lines: subclass, override the hooks you need, decorate with
 ``@register_mechanism("name")`` (see docs/privacy_mechanisms.md).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +100,19 @@ class NoiseProfile:
     horizon: int = 0               # scheduled curve only
     epsilon_target: float = 0.0    # scheduled curve only
     client_dropout_safe: bool = False  # survives mid-round client dropout
+
+
+class FoldSpec(NamedTuple):
+    """How a mechanism's client level enters the fused round-fold kernel.
+
+    ``mode`` is the kernel's noise mode: ``"none"`` (plain weighted fold),
+    ``"mask"`` (in-kernel pairwise secure-agg streams, cancel exactly) or
+    ``"laplace"`` (pre-drawn per-client iid noise folded with the survivor
+    mean).  ``sigma`` must be a STATIC float — mechanisms whose scale is
+    traced return None from :meth:`PrivacyMechanism.fold_spec` instead.
+    """
+    mode: str
+    sigma: float
 
 
 @dataclass(frozen=True)
@@ -184,10 +207,28 @@ class PrivacyMechanism:
         n_alive = jnp.maximum(alive.sum(), 1)
         return jnp.where(alive[:, None], w_clients, 0.0).sum(axis=0) / n_alive
 
+    def fold_spec(self, ctx: Optional[RoundContext] = None
+                  ) -> Optional[FoldSpec]:
+        """How the client level maps onto the fused round-fold kernel
+        (:mod:`repro.kernels.round_fold`), or None when it doesn't (the
+        engines then run the reference ``client_protect`` hooks).  The
+        noise-free base protocol is a plain weighted fold."""
+        return FoldSpec("none", 0.0)
+
     def server_combine(self, psi: jax.Array, key: jax.Array, A: jax.Array,
-                       ctx: Optional[RoundContext] = None) -> jax.Array:
-        """Combination step (8) across all servers: [P, D] -> [P, D]."""
-        return combine_nonprivate(A, psi)
+                       ctx: Optional[RoundContext] = None, *,
+                       cache: Optional[jax.Array] = None,
+                       gate: Optional[jax.Array] = None) -> jax.Array:
+        """Combination step (8) across all servers: [P, D] -> [P, D].
+
+        ``gate``/``cache`` ([P] mask, [P, D]) are the event engine's
+        cached-psi re-announce: gated-off servers contribute ``cache``
+        instead of ``psi`` (fused into the Pallas combine when
+        ``cfg.use_kernels``)."""
+        from repro.kernels import ops as kops
+        if self.cfg.use_kernels:
+            return kops.graph_combine(A, psi, None, cache=cache, gate=gate)
+        return combine_nonprivate(A, kops.apply_gate(psi, gate, cache))
 
     # --------------------------------------------------------- pytree API
 
@@ -281,19 +322,19 @@ class NoPrivacy(PrivacyMechanism):
 
 class _SecureAggClientMixin:
     """Client level of the hybrid family: pairwise secure-agg masks that
-    cancel exactly in the mean (eq. 23), Pallas or reference backend."""
+    cancel exactly in the mean (eq. 23).
+
+    This hook is the reference path; under ``cfg.use_kernels`` the engines
+    intercept at :meth:`fold_spec` and run the whole client level through
+    the fused round-fold kernel instead (in-VMEM mask streams), so no
+    kernel branch lives here."""
 
     def client_protect(self, w_clients, key, ctx=None):
         if not self.cfg.secure_agg:
             return jnp.mean(w_clients, axis=0)
         L, D = w_clients.shape
-        sigma = self.sigma(ctx)
-        if self.cfg.use_kernels and _is_static_scale(sigma):
-            from repro.kernels import ops as kops
-            seed = jax.random.randint(key, (1,), 0, 2**31 - 1).astype(
-                jnp.uint32)
-            return kops.secure_agg_mean(w_clients, seed, scale=float(sigma))
-        masks = pairwise_masks_vec(key, L, D, sigma, w_clients.dtype)
+        masks = pairwise_masks_vec(key, L, D, self.sigma(ctx),
+                                   w_clients.dtype)
         return jnp.mean(w_clients + masks, axis=0)
 
     def client_protect_masked(self, w_clients, key, alive, ctx=None):
@@ -308,6 +349,20 @@ class _SecureAggClientMixin:
         return masked_client_mean_dropout_vec(w_clients, key, alive,
                                               self.sigma(ctx))
 
+    def fold_spec(self, ctx=None):
+        """Pairwise masks cancel exactly in the (survivor-)mean, so the
+        client level is a weighted fold plus in-kernel mask streams; a
+        traced sigma (scheduled wrapper inside jit) cannot parameterize
+        the static mask scale -> fall back to the reference hooks."""
+        if not self.cfg.secure_agg:
+            return FoldSpec("none", 0.0)
+        sigma = self.sigma(ctx)
+        if not _is_static_scale(sigma):
+            return None
+        if float(sigma) == 0.0:          # zero-scale masks are exact zeros
+            return FoldSpec("none", 0.0)
+        return FoldSpec("mask", float(sigma))
+
 
 class _HomomorphicServerMixin:
     """Server level of the hybrid family: graph-homomorphic noise in the
@@ -315,15 +370,19 @@ class _HomomorphicServerMixin:
 
     distribution = "laplace"
 
-    def server_combine(self, psi, key, A, ctx=None):
+    def server_combine(self, psi, key, A, ctx=None, *, cache=None,
+                       gate=None):
         sigma = self.sigma(ctx)
+        from repro.kernels import ops as kops
         if self.cfg.use_kernels:
-            from repro.kernels import ops as kops
             sampler = get_sampler(self.distribution)
             g = sampler(key, psi.shape, sigma, psi.dtype)
-            # fused Pallas kernel computes A^T (psi+g) - g (eq. 8 + 24)
-            return kops.graph_combine(A, psi, g)
-        return homomorphic_combine_noise(key, A, psi, sigma,
+            # fused Pallas kernel computes A^T (psi_eff+g) - g (eq. 8 + 24),
+            # with the cached-psi re-announce select fused in when gated
+            return kops.graph_combine(A, psi, g, cache=cache, gate=gate)
+        return homomorphic_combine_noise(key, A,
+                                         kops.apply_gate(psi, gate, cache),
+                                         sigma,
                                          distribution=self.distribution)
 
     def combine_noise_tree(self, key, tree, ctx=None):
@@ -375,15 +434,13 @@ class IIDLaplaceDP(PrivacyMechanism):
     cancels — this is the O(mu^{-1}) utility penalty of Theorem 1."""
 
     def client_protect(self, w_clients, key, ctx=None):
+        # reference path only: under use_kernels the engines route through
+        # the fused round-fold kernel (fold_spec), which draws THIS
+        # sampler's noise on the same key — one noise trajectory per seed
+        # regardless of backend
         L, D = w_clients.shape
-        sigma = self.sigma(ctx)
-        if self.cfg.use_kernels and _is_static_scale(sigma):
-            from repro.kernels import ops as kops
-            u = jax.random.uniform(key, (L, D), w_clients.dtype,
-                                   minval=-0.5 + 1e-7, maxval=0.5 - 1e-7)
-            return jnp.mean(
-                w_clients + kops.laplace_transform(u, float(sigma)), axis=0)
-        noise = get_sampler("laplace")(key, (L, D), sigma, w_clients.dtype)
+        noise = get_sampler("laplace")(key, (L, D), self.sigma(ctx),
+                                       w_clients.dtype)
         return jnp.mean(w_clients + noise, axis=0)
 
     def client_protect_masked(self, w_clients, key, alive, ctx=None):
@@ -396,8 +453,22 @@ class IIDLaplaceDP(PrivacyMechanism):
         return PrivacyMechanism.client_protect_masked(
             self, w_clients + noise, key, alive, ctx)
 
-    def server_combine(self, psi, key, A, ctx=None):
-        return iid_noise_combine(key, A, psi, self.sigma(ctx))
+    def fold_spec(self, ctx=None):
+        """Per-client iid noise folds with the survivor-mean weight; the
+        draws themselves come from the reference sampler (same key), so
+        the fused path keeps backend parity tight."""
+        sigma = self.sigma(ctx)
+        if not _is_static_scale(sigma):
+            return None
+        if float(sigma) == 0.0:
+            return FoldSpec("none", 0.0)
+        return FoldSpec("laplace", float(sigma))
+
+    def server_combine(self, psi, key, A, ctx=None, *, cache=None,
+                       gate=None):
+        from repro.kernels.ops import apply_gate
+        return iid_noise_combine(key, A, apply_gate(psi, gate, cache),
+                                 self.sigma(ctx))
 
     def client_noise_tree(self, key, tree, L, ctx=None):
         # variance-equivalent single draw: mean of L iid draws has std
@@ -475,8 +546,16 @@ class ScheduledMechanism(PrivacyMechanism):
         return self.inner.client_protect_masked(w_clients, key, alive,
                                                 self._inner_ctx(ctx))
 
-    def server_combine(self, psi, key, A, ctx=None):
-        return self.inner.server_combine(psi, key, A, self._inner_ctx(ctx))
+    def fold_spec(self, ctx=None):
+        # a traced per-step sigma makes the inner fold_spec return None
+        # (the fused kernels need a static scale); a static step schedules
+        # straight through
+        return self.inner.fold_spec(self._inner_ctx(ctx))
+
+    def server_combine(self, psi, key, A, ctx=None, *, cache=None,
+                       gate=None):
+        return self.inner.server_combine(psi, key, A, self._inner_ctx(ctx),
+                                         cache=cache, gate=gate)
 
     def client_noise_tree(self, key, tree, L, ctx=None):
         return self.inner.client_noise_tree(key, tree, L,

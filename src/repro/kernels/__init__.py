@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The fused round-pipeline kernel layer (docs/kernels.md):
+#   <name>.py        raw Pallas kernels (round_fold, graph_combine,
+#                    secure_agg, clip_accum, laplace, swa_decode)
+#   ref.py           pure-jnp oracles / the "ref" backend
+#   ops.py           padding + block autotuning + backend dispatch — the
+#                    ONLY entry point engines use (GFLConfig.use_kernels)

@@ -9,9 +9,17 @@ regenerates its block of every pairwise stream in VMEM and accumulates
     out[:] = (1/L) sum_k (upd[k, :] + mask_k[:]),
     mask_k = sum_{j<k} -PRG(j,k) + sum_{j>k} +PRG(k,j)
 
-Because each pair's stream enters twice with opposite signs, the kernel's
-output equals the plain client mean bit-for-bit in exact arithmetic, and to
-float-add reordering in practice — asserted against ref.py in tests.
+Because each pair's stream enters the sum twice with opposite signs (once in
+each endpoint's net mask), the kernel's output equals the plain client mean
+bit-for-bit in exact arithmetic, and to float-add reordering in practice —
+asserted against ref.py in tests.
+
+The per-client net masks are accumulated by an O(L) ``fori_loop`` whose body
+evaluates all of client k's pair streams at once (:func:`net_mask_stream`),
+so trace/compile time and program size are FLAT in the cohort size L — the
+previous unrolled double python loop emitted all L(L-1)/2 pair streams as
+separate graph nodes (2016 streams at L=64), which made compile time
+quadratic in L.  Runtime stream work is unchanged.
 
 HBM traffic: L*D reads + D writes (the mask tensor would add 2*L*D).
 """
@@ -35,13 +43,46 @@ def _hash_u32(x: jax.Array) -> jax.Array:
 
 def pair_stream(pair_id: jax.Array, idx: jax.Array, seed: jax.Array,
                 scale: float) -> jax.Array:
-    """Uniform(-scale, scale) stream for one client pair at feature idx."""
+    """Uniform(-scale, scale) stream for one client pair at feature idx.
+
+    ``pair_id`` may be a scalar or an integer array (it broadcasts against
+    ``idx``), which is what lets :func:`net_mask_stream` evaluate all of one
+    client's pair streams in a single vectorized expression."""
+    pid = jnp.asarray(pair_id).astype(jnp.uint32)
     h = _hash_u32(idx.astype(jnp.uint32)
-                  ^ _hash_u32(jnp.uint32(pair_id) * jnp.uint32(0x9E3779B9)
+                  ^ _hash_u32(pid * jnp.uint32(0x9E3779B9)
                               + jnp.uint32(seed)))
     # top 24 bits -> uniform in [0,1) with exact float32 representation
     u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
     return (2.0 * u - 1.0) * scale
+
+
+def net_mask_stream(k: jax.Array, idx: jax.Array, seed: jax.Array,
+                    scale: float, L: int,
+                    alive: jax.Array | None = None) -> jax.Array:
+    """Client k's NET pairwise mask at feature block ``idx`` ([1, bd]).
+
+    mask_k = sum_{j>k} +PRG(pair(k,j)) + sum_{j<k} -PRG(pair(j,k)),
+    optionally restricted to pairs whose peer j is alive (``alive`` [L]
+    bool) — dead peers' streams never arrive, matching the Bonawitz
+    orphan-repair semantics of the reference path.
+
+    Vectorized over all L peers, so a ``fori_loop`` over k costs O(1) trace
+    size; the pair enumeration matches the row-major (a < b) ordering of
+    the reference double loop (pair (a, b) has id
+    ``a*(2L-a-1)/2 + (b-a-1)``).
+    """
+    j = jax.lax.broadcasted_iota(jnp.int32, (L, 1), 0)
+    k = jnp.asarray(k, jnp.int32)
+    a = jnp.minimum(j, k)
+    b = jnp.maximum(j, k)
+    pid = (a * (2 * L - a - 1)) // 2 + (b - a - 1)            # [L, 1]
+    s = pair_stream(pid, idx, seed, scale)                    # [L, bd]
+    sgn = jnp.where(j > k, jnp.float32(1.0), jnp.float32(-1.0))
+    m = jnp.where(j == k, 0.0, sgn) * s
+    if alive is not None:
+        m = jnp.where(alive[:, None], m, 0.0)
+    return jnp.sum(m, axis=0, keepdims=True)                  # [1, bd]
 
 
 def _secure_agg_kernel(upd_ref, seed_ref, out_ref, *, L: int, scale: float,
@@ -50,16 +91,15 @@ def _secure_agg_kernel(upd_ref, seed_ref, out_ref, *, L: int, scale: float,
     seed = seed_ref[0]
     idx = j * block_d + jax.lax.broadcasted_iota(jnp.uint32, (1, block_d), 1)
     acc = jnp.sum(upd_ref[...].astype(jnp.float32), axis=0, keepdims=True)
-    # pairwise masks: pair (a, b) adds +stream to a, -stream to b; the net
-    # effect on the SUM is zero, so we inject them in +/- pairs to mirror
-    # exactly what the distributed protocol computes (and its float error).
-    pid = 0
-    for a in range(L):
-        for b in range(a + 1, L):
-            s = pair_stream(jnp.uint32(pid), idx, seed, scale)
-            acc = acc + s            # client a's mask contribution
-            acc = acc - s            # client b's
-            pid += 1
+    # pairwise masks: each pair's stream enters the sum twice with opposite
+    # signs (through both endpoints' net masks), so the net effect on the
+    # SUM is zero — mirroring exactly what the distributed protocol
+    # computes.  O(L) fori_loop over clients, each body vectorized over the
+    # client's L-1 peer streams: trace/compile cost flat in L.
+    def fold_client(k, a):
+        return a + net_mask_stream(k, idx, seed, scale, L)
+
+    acc = jax.lax.fori_loop(0, L, fold_client, acc)
     out_ref[...] = (acc / L).astype(out_ref.dtype)
 
 

@@ -171,6 +171,61 @@ class Roofline:
         return json.dumps(asdict(self), indent=1)
 
 
+def round_pipeline_traffic(P: int, L: int, D: int, *, itemsize: int = 4,
+                           mode: str = "mask", fused: bool = True) -> dict:
+    """Analytic HBM bytes of one GFL round's client fold + combine.
+
+    Counts reads/writes of every materialized tensor in the chain over the
+    ``[P, L, D]`` gradients (itemized so the docs table and the kernel
+    bench agree on the accounting).  ``mode`` is the mechanism's client
+    level: "none" | "mask" (secure-agg, generated in-VMEM when fused) |
+    "laplace" (iid noise, pre-drawn and streamed once when fused).
+
+    Reference chain (each XLA op re-reads its operand from HBM):
+      norms, scale+update, noise materialize+add (noised modes), fold,
+      combine.  Fused pipeline (repro.kernels.round_fold + graph_combine):
+      a norms pass, one scale/noise/fold pass, and the fused combine —
+      in "laplace" mode the parity-preserving pre-drawn noise operand
+      costs one extra HBM write + read (counted honestly on BOTH sides;
+      "mask" noise is generated in-VMEM and costs nothing).
+
+    Besides byte totals, ``pld_passes`` counts the gradient-scale
+    ([P, L, D]) HBM round trips — the quantity that dominates at model
+    scale, where the [P, D]-order terms vanish: 8 for the reference chain,
+    2 fused ("none"/"mask"), 4 fused ("laplace", incl. the noise
+    write+read).
+    """
+    PLD = P * L * D * itemsize
+    PD = P * D * itemsize
+    if fused:
+        terms = {
+            "norms_pass_read": PLD,
+            "fold_pass_read": PLD + PD,                    # grads + base w
+            # parity-preserving pre-drawn noise: sampler writes the
+            # [P, L, D] operand, the fold pass streams it back
+            "noise_materialize": PLD if mode == "laplace" else 0,
+            "noise_stream": PLD if mode == "laplace" else 0,
+            "psi_write": PD,
+            "combine": 3 * PD if mode == "none" else 4 * PD,
+        }
+        passes = {"none": 2, "mask": 2, "laplace": 4}[mode]
+    else:
+        noised = mode != "none"
+        terms = {
+            "norms_pass_read": PLD,
+            "update_read_write": 2 * PLD + PD,
+            "noise_materialize": PLD if noised else 0,
+            "noise_add": 3 * PLD if noised else 0,
+            "fold_read": PLD,
+            "psi_write": PD,
+            "combine": 3 * PD if mode == "none" else 4 * PD,
+        }
+        passes = 8 if noised else 4
+    terms["total"] = sum(terms.values())
+    terms["pld_passes"] = passes
+    return terms
+
+
 def model_flops_estimate(n_params: int, n_active_params: int, tokens: int,
                          kind: str) -> float:
     """6*N*D for training, 2*N*D for inference forward (per step)."""

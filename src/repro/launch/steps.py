@@ -69,6 +69,27 @@ class TrainState(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+def _kernel_dense_combine(A, psi, g):
+    """Dense combine routed through the fused graph-combine Pallas kernel
+    (eq. 8 + 24): each leaf is flattened to [P, D] and streamed through
+    :func:`repro.kernels.ops.graph_combine` — one HBM pass per leaf instead
+    of the gather -> noise-add -> einsum -> subtract chain.  Only the
+    cancelling (graph-homomorphic) noise structure maps onto the kernel;
+    ``make_train_step`` falls back to the einsum for everything else."""
+    from repro.kernels import ops as kops
+    Pn = jax.tree_util.tree_leaves(psi)[0].shape[0]
+
+    def mix(x, noise):
+        flat = kops.graph_combine(
+            A, x.reshape(Pn, -1),
+            None if noise is None else noise.reshape(Pn, -1))
+        return flat.reshape(x.shape).astype(x.dtype)
+
+    if g is None:
+        return jax.tree.map(lambda x: mix(x, None), psi)
+    return jax.tree.map(mix, psi, g)
+
+
 def _dense_combine(A, psi, g, cancel: bool = True):
     """einsum baseline: w_p = sum_m A[m,p] psi_m + (A^T g)_p [- g_p].
 
@@ -493,7 +514,13 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
         cancel = profile.server_cancels_exactly
 
         if gfl.combine_impl == "dense":
-            new_params = _dense_combine(A_rt, psi, g, cancel=cancel)
+            # whole-run kernel switch: the cancelling noise structure maps
+            # onto the fused Pallas combine (docs/kernels.md); iid (non-
+            # cancelling) noise keeps the einsum's [P, P, D] edge draws
+            if gfl.use_kernels and (g is None or cancel):
+                new_params = _kernel_dense_combine(A_rt, psi, g)
+            else:
+                new_params = _dense_combine(A_rt, psi, g, cancel=cancel)
         else:
             maker = (_make_sparse_combine if gfl.combine_impl == "sparse"
                      else _make_shardmap_combine)

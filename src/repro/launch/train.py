@@ -70,6 +70,11 @@ def main(argv=None):
                          "async:buffer=8,latency=lognorm:0.5,max_stale=4 — "
                          "drives staleness-weighted cohort weights and "
                          "per-server release accounting")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route the round through the fused Pallas kernel "
+                         "layer (docs/kernels.md): the dense combine runs "
+                         "the fused graph-combine per leaf (interpret mode "
+                         "on CPU)")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args(argv)
 
@@ -90,7 +95,8 @@ def main(argv=None):
     gfl_cfg = GFLConfig(topology="ring", privacy=args.privacy,
                         sigma_g=args.sigma, mu=args.mu, grad_bound=10.0,
                         combine_impl=args.combine, fault=args.fault,
-                        cohort=args.cohort, async_spec=args.async_spec)
+                        cohort=args.cohort, async_spec=args.async_spec,
+                        use_kernels=args.use_kernels)
     # mechanism-aware: the noise profile picks the curve (eps is inf for
     # a zero-noise config — the honest Theorem-2 answer)
     acc = mechanism_for(gfl_cfg).accountant()
