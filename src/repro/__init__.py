@@ -16,3 +16,22 @@ import jax as _jax
 
 if "JAX_THREEFRY_PARTITIONABLE" not in _os.environ:
     _jax.config.update("jax_threefry_partitionable", True)
+
+#: environment override for the package-wide base seed (see rng_key)
+SEED_ENV = "REPRO_SEED"
+
+
+def rng_key(seed=None) -> "_jax.Array":
+    """The approved seed factory (gflint GFL001).
+
+    Launchers and demos must not hard-code ``PRNGKey(0)`` at the call
+    site — a sweep that forgets to thread its seed then silently shares
+    randomness across runs.  ``rng_key()`` draws the base key from one
+    place: an explicit ``seed`` argument wins, else the ``REPRO_SEED``
+    environment variable, else 0 (bit-identical to the historical
+    ``PRNGKey(0)`` default, so existing goldens are unchanged).
+    Derive per-use keys with ``jax.random.fold_in``/``split`` as usual.
+    """
+    if seed is None:
+        seed = int(_os.environ.get(SEED_ENV, "0"))
+    return _jax.random.PRNGKey(seed)

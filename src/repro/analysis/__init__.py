@@ -1,0 +1,17 @@
+"""gflint: AST-based privacy/repro invariant analysis for the GFL stack.
+
+Static rules (GFL001-GFL005) live in :mod:`repro.analysis.rules`; the
+runtime counterpart (key-reuse / NaN / ledger checks) is
+:mod:`repro.sanitize`.  CLI: ``python -m repro.analysis``.
+"""
+from repro.analysis.baseline import (diff_against_baseline, load_baseline,
+                                     save_baseline)
+from repro.analysis.framework import (AnalysisContext, Finding, ModuleInfo,
+                                      Rule, run_analysis)
+from repro.analysis.rules import ALL_RULES, default_rules, rule_by_id
+
+__all__ = [
+    "ALL_RULES", "AnalysisContext", "Finding", "ModuleInfo", "Rule",
+    "default_rules", "diff_against_baseline", "load_baseline",
+    "rule_by_id", "run_analysis", "save_baseline",
+]

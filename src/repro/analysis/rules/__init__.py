@@ -1,0 +1,22 @@
+"""gflint rule registry."""
+from __future__ import annotations
+
+from repro.analysis.rules.accounting import AccountantCoverageRule
+from repro.analysis.rules.keys import KeyHygieneRule
+from repro.analysis.rules.parity import BackendParityRule
+from repro.analysis.rules.specs import SpecRoundTripRule
+from repro.analysis.rules.tracing import TraceSafetyRule
+
+ALL_RULES = (KeyHygieneRule, AccountantCoverageRule, TraceSafetyRule,
+             BackendParityRule, SpecRoundTripRule)
+
+
+def default_rules():
+    return [cls() for cls in ALL_RULES]
+
+
+def rule_by_id(rule_id: str):
+    for cls in ALL_RULES:
+        if cls.id == rule_id:
+            return cls
+    raise KeyError(rule_id)

@@ -1,0 +1,236 @@
+"""GFL001 — PRNG key hygiene.
+
+Two sub-checks:
+
+* **key reuse**: a ``jax.random.*`` sampling call consumes its key; a
+  second sampling call on the same (un-rebound) name in the same scope is
+  a correlated-noise bug — exactly the class of error that silently
+  breaks the DP guarantee (two "independent" noise draws that are
+  bit-identical).  ``split``/``fold_in`` (or any rebinding) clears the
+  consumed mark.
+* **literal seeds**: ``PRNGKey(<int literal>)`` outside tests and the
+  approved seed factory (``repro.rng_key``) hard-codes the experiment
+  seed at the call site, so sweeps silently share randomness.
+
+The reuse analysis is a small abstract interpretation over statement
+lists: ``if``/``else`` branches fork the consumed-set and merge by union;
+loop bodies are scanned twice so a draw that consumes a loop-invariant
+key is caught on the second pass.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.framework import (AnalysisContext, Finding, ModuleInfo,
+                                      Rule, dotted_name)
+
+# jax.random samplers that consume a key (first positional arg).
+SAMPLING_FNS = frozenset({
+    "normal", "uniform", "randint", "bernoulli", "laplace", "exponential",
+    "gamma", "beta", "dirichlet", "categorical", "choice", "permutation",
+    "gumbel", "truncated_normal", "cauchy", "logistic", "poisson",
+    "rademacher", "bits", "orthogonal", "ball", "loggamma", "rayleigh",
+    "multivariate_normal", "t", "gallery",
+})
+# repo-local samplers with the same (key, ...) convention.
+LOCAL_SAMPLERS = frozenset({"sample_laplace", "sample_gaussian"})
+# interposing calls that re-derive keys and never count as consumption.
+KEY_DERIVE_FNS = frozenset({"split", "fold_in", "clone"})
+KEY_CTORS = frozenset({"PRNGKey", "key"})
+
+# files allowed to construct literal-seed keys (the seed factory itself).
+ALLOWED_LITERAL_SUFFIXES = ("repro/__init__.py",)
+
+
+class _JaxRandomResolver:
+    """Map call nodes back to jax.random function names through the
+    module's import aliases (``import jax``, ``import jax.random as jr``,
+    ``from jax import random``, ``from jax.random import normal as n``)."""
+
+    def __init__(self, tree: ast.Module):
+        self.jax_aliases: Set[str] = set()
+        self.random_aliases: Set[str] = set()
+        self.direct: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax":
+                        self.jax_aliases.add(a.asname or "jax")
+                    elif a.name == "jax.random":
+                        if a.asname:
+                            self.random_aliases.add(a.asname)
+                        else:
+                            self.jax_aliases.add("jax")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax":
+                    for a in node.names:
+                        if a.name == "random":
+                            self.random_aliases.add(a.asname or "random")
+                elif node.module == "jax.random":
+                    for a in node.names:
+                        self.direct[a.asname or a.name] = a.name
+
+    def resolve(self, call: ast.Call) -> Optional[str]:
+        """jax.random function name for this call, or None."""
+        func = call.func
+        name = dotted_name(func)
+        if name is None:
+            return None
+        parts = name.split(".")
+        if len(parts) >= 3 and parts[0] in self.jax_aliases \
+                and parts[-2] == "random":
+            return parts[-1]
+        if len(parts) == 2 and parts[0] in self.random_aliases:
+            return parts[1]
+        if len(parts) == 1 and parts[0] in self.direct:
+            return self.direct[parts[0]]
+        return None
+
+
+class KeyHygieneRule(Rule):
+    id = "GFL001"
+    title = "PRNG key hygiene (reuse / literal seeds)"
+
+    def check(self, ctx: AnalysisContext) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for mod in ctx.source_modules():
+            resolver = _JaxRandomResolver(mod.tree)
+            findings.extend(self._literal_seeds(mod, resolver))
+            findings.extend(self._reuse(mod, resolver))
+        return findings
+
+    # -- literal PRNGKey(<const>) ------------------------------------
+    def _literal_seeds(self, mod: ModuleInfo,
+                       resolver: _JaxRandomResolver) -> Iterable[Finding]:
+        if mod.path.endswith(ALLOWED_LITERAL_SUFFIXES):
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = resolver.resolve(node)
+            if fn not in KEY_CTORS or not node.args:
+                continue
+            seed = node.args[0]
+            if isinstance(seed, ast.Constant) and isinstance(seed.value,
+                                                             int):
+                yield Finding(
+                    self.id, mod.path, node.lineno, node.col_offset,
+                    mod.context_of(node),
+                    f"literal PRNGKey({seed.value}): hard-coded seed "
+                    f"outside an approved factory; route through "
+                    f"repro.rng_key()")
+
+    # -- key reuse ----------------------------------------------------
+    def _reuse(self, mod: ModuleInfo,
+               resolver: _JaxRandomResolver) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        scopes = [mod.tree] + [n for n in ast.walk(mod.tree)
+                               if isinstance(n, (ast.FunctionDef,
+                                                 ast.AsyncFunctionDef))]
+        for scope in scopes:
+            body = scope.body
+            self._scan_block(body, set(), mod, resolver, findings)
+        # lambdas are their own binding scope (`lambda k: choice(k, ...)`
+        # twice is two different keys): scan each body independently
+        for lam in ast.walk(mod.tree):
+            if isinstance(lam, ast.Lambda):
+                self._scan_expr(lam.body, set(), mod, resolver, findings)
+        # dedup per (line, col) — loop double-scan revisits statements
+        return list({(f.line, f.col, f.message): f for f in findings}
+                    .values())
+
+    def _scan_block(self, stmts, consumed: Set[str], mod: ModuleInfo,
+                    resolver: _JaxRandomResolver,
+                    findings: List[Finding]) -> Set[str]:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue  # nested scopes analyzed on their own
+            if isinstance(st, ast.If):
+                c1 = self._scan_block(st.body, set(consumed), mod,
+                                      resolver, findings)
+                c2 = self._scan_block(st.orelse, set(consumed), mod,
+                                      resolver, findings)
+                consumed = c1 | c2
+            elif isinstance(st, (ast.For, ast.While)):
+                # two passes: catches draws consuming a loop-invariant key
+                once = self._scan_block(st.body, set(consumed), mod,
+                                        resolver, findings)
+                consumed = self._scan_block(st.body, once, mod, resolver,
+                                            findings)
+                consumed = self._scan_block(st.orelse, consumed, mod,
+                                            resolver, findings)
+            elif isinstance(st, (ast.With, ast.Try)):
+                for block in getattr(st, "body", []), \
+                        getattr(st, "finalbody", []):
+                    consumed = self._scan_block(block, consumed, mod,
+                                                resolver, findings)
+                for h in getattr(st, "handlers", []):
+                    consumed |= self._scan_block(h.body, set(consumed),
+                                                 mod, resolver, findings)
+            else:
+                consumed = self._scan_statement(st, consumed, mod,
+                                                resolver, findings)
+        return consumed
+
+    @staticmethod
+    def _walk_same_scope(root) -> Iterable[ast.AST]:
+        """Walk `root` without descending into nested binding scopes
+        (defs, lambdas, comprehensions bind their own names)."""
+        stack = list(ast.iter_child_nodes(root))
+        yield root
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _scan_expr(self, expr, consumed: Set[str], mod: ModuleInfo,
+                   resolver: _JaxRandomResolver,
+                   findings: List[Finding]) -> Set[str]:
+        return self._scan_statement(ast.Expr(value=expr), consumed, mod,
+                                    resolver, findings)
+
+    def _scan_statement(self, st, consumed: Set[str], mod: ModuleInfo,
+                        resolver: _JaxRandomResolver,
+                        findings: List[Finding]) -> Set[str]:
+        for node in self._walk_same_scope(st):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            fn = resolver.resolve(node)
+            tail = dotted_name(node.func)
+            tail = tail.split(".")[-1] if tail else None
+            is_sampler = fn in SAMPLING_FNS or tail in LOCAL_SAMPLERS
+            if fn in KEY_DERIVE_FNS:
+                continue  # split/fold_in interpose; no consumption
+            if not is_sampler:
+                continue
+            keyarg = node.args[0]
+            if not isinstance(keyarg, ast.Name):
+                continue  # split(k)[0], fold_in(k, i): fresh each time
+            name = keyarg.id
+            if name in consumed:
+                findings.append(Finding(
+                    self.id, mod.path, node.lineno, node.col_offset,
+                    mod.context_of(node),
+                    f"key '{name}' reused by "
+                    f"{fn or tail}() without an interposed "
+                    f"split/fold_in — correlated noise draws"))
+            consumed.add(name)
+        # any rebinding clears the consumed mark
+        for node in self._walk_same_scope(st):
+            targets: List[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                targets = [node.target]
+            elif isinstance(node, ast.NamedExpr):
+                targets = [node.target]
+            for tgt in targets:
+                for leaf in ast.walk(tgt):
+                    if isinstance(leaf, ast.Name):
+                        consumed.discard(leaf.id)
+        return consumed

@@ -1,0 +1,63 @@
+"""GFL004 — backend-parity coverage.
+
+The kernel layer (``kernels/ops.py``) dispatches every op between the
+Pallas implementation and a pure-jnp reference (``backend="pallas"|
+"ref"``); the whole-run ``use_kernels`` switch is only trustworthy while
+each dispatched op (a) actually wires a ``*_ref`` counterpart and (b)
+has a parity test referencing it by name.  The rule treats any public
+function with a ``backend`` parameter as a dispatched op, so fixture
+modules and future dispatch layers are covered without configuration.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.framework import (AnalysisContext, Finding, Rule,
+                                      dotted_name)
+
+
+def _has_backend_param(fn) -> bool:
+    args = fn.args
+    every = (args.posonlyargs + args.args + args.kwonlyargs)
+    return any(a.arg == "backend" for a in every)
+
+
+def _references_ref_impl(fn) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr.endswith("_ref"):
+            return True
+        if isinstance(node, ast.Name) and node.id.endswith("_ref"):
+            return True
+        name = dotted_name(node) if isinstance(node, ast.Attribute) else None
+        if name and "_ref." in name:
+            return True
+    return False
+
+
+class BackendParityRule(Rule):
+    id = "GFL004"
+    title = "dispatched kernel ops have a ref counterpart + parity test"
+
+    def check(self, ctx: AnalysisContext) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for mod in ctx.source_modules():
+            for fn in ast.walk(mod.tree):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                if fn.name.startswith("_") or not _has_backend_param(fn):
+                    continue
+                if not _references_ref_impl(fn):
+                    findings.append(Finding(
+                        self.id, mod.path, fn.lineno, fn.col_offset,
+                        mod.context_of(fn),
+                        f"dispatched op '{fn.name}' has no ref "
+                        f"counterpart (no *_ref reference in its body)"))
+                if not ctx.test_references(fn.name):
+                    findings.append(Finding(
+                        self.id, mod.path, fn.lineno, fn.col_offset,
+                        mod.context_of(fn),
+                        f"dispatched op '{fn.name}' has no parity test "
+                        f"referencing it"))
+        return findings

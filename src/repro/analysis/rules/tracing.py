@@ -1,0 +1,241 @@
+"""GFL003 — trace safety.
+
+Inside a traced body (``jit`` / ``scan`` / ``cond`` / ``shard_map`` /
+Pallas kernels), Python-level branching or host materialization of a
+traced value either crashes at trace time or — worse — triggers a
+recompile per concrete value, leaking data through compilation timing.
+PR 1's threefry fix was one instance of this class; the rule catches:
+
+* ``if`` / ``while`` / ternary / ``assert`` whose test reads a traced
+  parameter,
+* ``float()`` / ``bool()`` / ``int()`` on a traced parameter,
+* ``np.*`` calls fed a traced parameter.
+
+A function counts as traced when it is decorated with ``jit`` (directly
+or via ``partial(jax.jit, ...)``) or its name is passed as an argument
+to a tracing entry point (``jit``, ``vmap``, ``grad``, ``scan``,
+``cond``, ``while_loop``, ``fori_loop``, ``shard_map``,
+``pallas_call``, ...).  Parameters named in ``static_argnames`` /
+``static_argnums`` are exempt, as are structural reads that are static
+under tracing: ``x is None``, ``x.shape`` / ``x.ndim`` / ``x.dtype`` /
+``x.size``, and ``len(x)`` / ``isinstance(x, ...)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.framework import (AnalysisContext, Finding, ModuleInfo,
+                                      Rule, dotted_name)
+
+TRACE_ENTRY_POINTS = frozenset({
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "scan", "cond",
+    "while_loop", "fori_loop", "shard_map", "pallas_call", "checkpoint",
+    "remat", "custom_vjp", "custom_jvp", "switch", "associative_scan",
+})
+STRUCTURAL_CALLS = frozenset({"len", "isinstance", "type", "hasattr",
+                              "getattr"})
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding",
+                          "at"})
+CASTS = frozenset({"float", "bool", "int"})
+
+
+def _decorator_trace_info(fn) -> Tuple[bool, Set[str], Set[int]]:
+    """(is_traced, static_argnames, static_argnums) from decorators."""
+    static_names: Set[str] = set()
+    static_nums: Set[int] = set()
+    traced = False
+    for dec in fn.decorator_list:
+        name = dotted_name(dec if not isinstance(dec, ast.Call)
+                           else dec.func)
+        tail = name.split(".")[-1] if name else None
+        if tail in ("jit", "pjit"):
+            traced = True
+            if isinstance(dec, ast.Call):
+                static_names, static_nums = _static_kwargs(dec)
+        elif tail == "partial" and isinstance(dec, ast.Call) and dec.args:
+            inner = dotted_name(dec.args[0])
+            if inner and inner.split(".")[-1] in ("jit", "pjit"):
+                traced = True
+                static_names, static_nums = _static_kwargs(dec)
+    return traced, static_names, static_nums
+
+
+def _static_kwargs(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str):
+                    names.add(node.value)
+        elif kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) \
+                        and isinstance(node.value, int):
+                    nums.add(node.value)
+    return names, nums
+
+
+def _names_passed_to_tracers(tree: ast.Module) -> Set[str]:
+    """Function names passed (positionally or by keyword) into a tracing
+    entry point anywhere in the module: ``jax.jit(tick)``,
+    ``lax.scan(body, ...)``, ``pl.pallas_call(kernel, ...)``."""
+    passed: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        tail = name.split(".")[-1] if name else None
+        if tail not in TRACE_ENTRY_POINTS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                passed.add(arg.id)
+    return passed
+
+
+class _ParentMap(dict):
+    @classmethod
+    def build(cls, root: ast.AST) -> "_ParentMap":
+        pm = cls()
+        for parent in ast.walk(root):
+            for child in ast.iter_child_nodes(parent):
+                pm[id(child)] = parent
+        return pm
+
+
+class TraceSafetyRule(Rule):
+    id = "GFL003"
+    title = "no python control flow / host casts on traced values"
+
+    def check(self, ctx: AnalysisContext) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for mod in ctx.source_modules():
+            passed = _names_passed_to_tracers(mod.tree)
+            np_aliases = _numpy_aliases(mod.tree)
+            for fn in ast.walk(mod.tree):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                traced, st_names, st_nums = _decorator_trace_info(fn)
+                if not traced and fn.name in passed:
+                    traced = True
+                if not traced:
+                    continue
+                findings.extend(self._check_fn(fn, st_names, st_nums,
+                                               mod, np_aliases))
+        return findings
+
+    def _check_fn(self, fn, static_names: Set[str], static_nums: Set[int],
+                  mod: ModuleInfo, np_aliases: Set[str]
+                  ) -> Iterable[Finding]:
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        traced_params = {p for i, p in enumerate(params)
+                         if p not in static_names and i not in static_nums
+                         and p not in ("self", "cls")}
+        if not traced_params:
+            return
+
+        def own_nodes(owner):
+            stack = list(ast.iter_child_nodes(owner))
+            while stack:
+                node = stack.pop()
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                yield node
+                stack.extend(ast.iter_child_nodes(node))
+
+        ctxname = mod.context_of(fn)
+        qual = ctxname + "." + fn.name if ctxname else fn.name
+        for node in own_nodes(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+                test = node.test
+                hit = _traced_value_read(test, traced_params)
+                if hit:
+                    kind = {ast.If: "if", ast.While: "while",
+                            ast.IfExp: "ternary",
+                            ast.Assert: "assert"}[type(node)]
+                    yield Finding(
+                        self.id, mod.path, node.lineno, node.col_offset,
+                        mod.context_of(node),
+                        f"python `{kind}` on traced value '{hit}' inside "
+                        f"traced body {qual} — recompiles per value and "
+                        f"leaks data-dependent control flow; use lax.cond/"
+                        f"jnp.where")
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                parts = name.split(".") if name else []
+                tail = parts[-1] if parts else None
+                if tail in CASTS and len(parts) == 1:
+                    for arg in node.args:
+                        hit = _traced_value_read(arg, traced_params)
+                        if hit:
+                            yield Finding(
+                                self.id, mod.path, node.lineno,
+                                node.col_offset, mod.context_of(node),
+                                f"host cast {tail}() on traced value "
+                                f"'{hit}' inside traced body {qual} — "
+                                f"forces a trace-time concretization")
+                            break
+                elif parts and parts[0] in np_aliases:
+                    for arg in node.args:
+                        hit = _traced_value_read(arg, traced_params)
+                        if hit:
+                            yield Finding(
+                                self.id, mod.path, node.lineno,
+                                node.col_offset, mod.context_of(node),
+                                f"numpy call {name}() on traced value "
+                                f"'{hit}' inside traced body {qual} — "
+                                f"materializes the tracer on host; use "
+                                f"jnp")
+                            break
+
+
+def _numpy_aliases(tree: ast.Module) -> Set[str]:
+    aliases: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    aliases.add(a.asname or "numpy")
+    return aliases
+
+
+def _traced_value_read(expr: ast.AST, traced: Set[str]) -> Optional[str]:
+    """Name of a traced parameter whose *value* (not structure) is read
+    inside `expr`; None when every reference is structural/static."""
+    pm = _ParentMap.build(expr)
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Name) or node.id not in traced:
+            continue
+        if _is_structural(node, pm):
+            continue
+        return node.id
+    return None
+
+
+def _is_structural(name: ast.Name, pm: _ParentMap) -> bool:
+    node: ast.AST = name
+    while True:
+        parent = pm.get(id(node))
+        if parent is None:
+            return False
+        if isinstance(parent, ast.Attribute) and parent.value is node \
+                and parent.attr in STATIC_ATTRS:
+            return True
+        if isinstance(parent, ast.Call):
+            fname = dotted_name(parent.func)
+            tail = fname.split(".")[-1] if fname else None
+            if tail in STRUCTURAL_CALLS and parent.func is not node:
+                return True
+        if isinstance(parent, ast.Compare):
+            # `x is None` / `x is not None` are static under tracing
+            ops_ok = all(isinstance(op, (ast.Is, ast.IsNot))
+                         for op in parent.ops)
+            operands = [parent.left] + list(parent.comparators)
+            if ops_ok and node in operands:
+                return True
+        node = parent

@@ -252,6 +252,11 @@ class GFLConfig:
     grad_acc_dtype: str = "float32"  # client-grad accumulator dtype
     client_parallel: bool = False    # small-model mode: clients sharded over
                                      # the "model" axis, params replicated
+    sanitize: bool = False           # runtime sanitizer mode: run engines
+                                     # under jax key-reuse/NaN debugging and
+                                     # cross-check the release/charge ledger
+                                     # (repro.sanitize; REPRO_SANITIZE=1
+                                     # enables it process-wide)
 
     @property
     def effective_clients(self) -> int:

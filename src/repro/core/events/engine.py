@@ -56,6 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from contextlib import nullcontext
+
 from repro.configs.base import GFLConfig
 from repro.core import gfl
 from repro.core import sampling as IS
@@ -69,6 +71,8 @@ from repro.core.events.buffer import (
 from repro.core.events.queue import EventQueue, trace_intensity_fn
 from repro.core.events.spec import AsyncSpec, parse_async_spec
 from repro.core.population.cohort import AvailabilityTrace, parse_cohort_spec
+from repro.sanitize import (ReleaseLedger, SanitizerError,
+                            sanitize_enabled, sanitizer_scope)
 from repro.core.population.engine import (
     as_population,
     estimate_w_ref,
@@ -103,6 +107,8 @@ class AsyncRunResult(NamedTuple):
     dropped_stale: np.ndarray  # [T, P] arrivals refused at the bound
     gaps: Optional[np.ndarray]  # [T] realized spectral gaps (fault runs)
     spec: AsyncSpec
+    accountant: Optional[object] = None  # AsyncAccountant, charged off the
+                                         # realized flush/q schedule
 
     @property
     def releases(self) -> np.ndarray:
@@ -310,6 +316,42 @@ def run_gfl_async(source, cfg: GFLConfig, *, ticks: int,
                   spec: Optional[AsyncSpec] = None,
                   scheduler=None, w_ref=None, scan: bool = False
                   ) -> AsyncRunResult:
+    """Run the event-driven executor with accounting/sanitizing attached.
+
+    The returned result carries an :class:`AsyncAccountant` charged off
+    the realized flush/q schedule (``record_schedule``), so per-server
+    release ledgers always accompany the trajectory.  Under sanitize mode
+    (``cfg.sanitize`` / ``REPRO_SANITIZE=1``) the run executes inside
+    :func:`repro.sanitize.sanitizer_scope` and the total releases
+    performed are cross-checked against the accountant's ledgers.
+    """
+    sanitize = sanitize_enabled(cfg)
+    with sanitizer_scope() if sanitize else nullcontext():
+        res = _run_async_impl(
+            source, cfg, ticks=ticks, batch_size=batch_size, seed=seed,
+            A=A, process=process, spec=spec, scheduler=scheduler,
+            w_ref=w_ref, scan=scan)
+    P = res.flushed.shape[1]
+    acc = mechanism_for(cfg).async_accountant(P)
+    acc.record_schedule(np.asarray(res.flushed), np.asarray(res.q))
+    if sanitize:
+        ledger = ReleaseLedger()
+        ledger.record_release(int(np.asarray(res.flushed).sum()))
+        ledger.charge_from(acc)
+        ledger.cross_check()
+        if not np.all(np.isfinite(np.asarray(res.msd))):
+            raise SanitizerError("non-finite MSD trajectory under "
+                                 "sanitize mode")
+    return res._replace(accountant=acc)
+
+
+def _run_async_impl(source, cfg: GFLConfig, *, ticks: int,
+                    batch_size: int = 10, seed: int = 0,
+                    A: Optional[np.ndarray] = None,
+                    process: Optional[TopologyProcess] = None,
+                    spec: Optional[AsyncSpec] = None,
+                    scheduler=None, w_ref=None, scan: bool = False
+                    ) -> AsyncRunResult:
     """Run the event-driven GFL executor for ``ticks`` event batches.
 
     ``source``/``cfg`` follow :func:`~repro.core.population.engine.

@@ -36,6 +36,7 @@ to ``PrivacyAccountant.amplified_epsilon`` — see docs/population.md.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import NamedTuple, Optional
 
 import jax
@@ -52,6 +53,7 @@ from repro.core.population.population import (
 )
 from repro.core.privacy.mechanism import RoundContext, mechanism_for
 from repro.core.resilience.process import TopologyProcess
+from repro.sanitize import ReleaseLedger, sanitize_enabled, sanitizer_scope
 from repro.core.simulate import (
     _solve_global,
     base_combination_matrix,
@@ -142,6 +144,8 @@ class PopulationRunResult(NamedTuple):
     scheduler: CohortScheduler  # carries IS state + q ledger for reuse
     gaps: Optional[np.ndarray] = None       # [iters] realized spectral gaps
     staleness: Optional[np.ndarray] = None  # [iters, P] straggler psi ages
+    accountant: Optional[object] = None     # PrivacyAccountant, charged at
+                                            # the realized per-round q
 
 
 def _make_weighted_round(pop: ClientPopulation, cfg: GFLConfig, grad_fn,
@@ -229,6 +233,47 @@ def run_gfl_population(source, cfg: GFLConfig, *, iters: int,
                        scheduler: Optional[CohortScheduler] = None,
                        w_ref=None, scan: bool = False
                        ) -> PopulationRunResult:
+    """Run the GFL protocol over a (virtual) client population.
+
+    Thin accounting/sanitizing shell around the executor: the returned
+    result carries a :class:`PrivacyAccountant` charged once per round at
+    that round's *realized* sampling rate (the same q trace the result
+    exposes), so every engine run has its budget bookkeeping attached
+    rather than left to the caller.  Under sanitize mode
+    (``cfg.sanitize`` / ``REPRO_SANITIZE=1``) the run executes inside
+    :func:`repro.sanitize.sanitizer_scope` (key-reuse + NaN debugging)
+    and the release/charge ledger is cross-checked.
+    """
+    sanitize = sanitize_enabled(cfg)
+    with sanitizer_scope() if sanitize else nullcontext():
+        res = _run_population_impl(
+            source, cfg, iters=iters, batch_size=batch_size, seed=seed,
+            record_every=record_every, A=A, process=process,
+            scheduler=scheduler, w_ref=w_ref, scan=scan)
+    acc = mechanism_for(cfg).accountant()
+    acc.sampling_rate = res.scheduler.L / res.scheduler.K
+    for qi in np.asarray(res.q):
+        acc.advance(1, q=float(qi))
+    if sanitize:
+        ledger = ReleaseLedger()
+        ledger.record_release(iters)   # one client-level release per round
+        ledger.charge_from(acc)
+        ledger.cross_check()
+        if not np.all(np.isfinite(np.asarray(res.msd))):
+            from repro.sanitize import SanitizerError
+            raise SanitizerError("non-finite MSD trajectory under "
+                                 "sanitize mode")
+    return res._replace(accountant=acc)
+
+
+def _run_population_impl(source, cfg: GFLConfig, *, iters: int,
+                         batch_size: int = 10, seed: int = 0,
+                         record_every: int = 1,
+                         A: Optional[np.ndarray] = None,
+                         process: Optional[TopologyProcess] = None,
+                         scheduler: Optional[CohortScheduler] = None,
+                         w_ref=None, scan: bool = False
+                         ) -> PopulationRunResult:
     """Run the GFL protocol over a (virtual) client population.
 
     ``source``: a :class:`ClientPopulation`, a materialized

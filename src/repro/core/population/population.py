@@ -127,6 +127,36 @@ def parse_population_spec(spec: str) -> PopulationSpec:
     return PopulationSpec(kind, args)
 
 
+def _fmt_arg(v) -> str:
+    # repr keeps the "." / "e" marker the parser uses to pick float vs
+    # int, so values survive the round trip with their types intact
+    return repr(v) if isinstance(v, float) else str(v)
+
+
+def population_to_spec(spec: PopulationSpec) -> str:
+    """Inverse of :func:`parse_population_spec` (canonical form).
+
+    ``parse_population_spec(population_to_spec(s)) == s`` for every valid
+    :class:`PopulationSpec`; shorthand inputs (``synthetic``,
+    ``dirichlet,alpha=0.3``) re-render in canonical long form.
+    """
+    args = dict(spec.args)
+    if spec.kind == "dense":
+        head = "dense"
+    elif spec.kind == "dirichlet":
+        # alpha renders positionally only when float — the positional
+        # slot always re-parses as float, so an int alpha (legal via the
+        # keyword form) must stay a keyword to round-trip its type
+        if isinstance(args.get("alpha"), float):
+            head = f"dirichlet:{_fmt_arg(args.pop('alpha'))}"
+        else:
+            head = "dirichlet"
+    else:
+        head = f"synthetic:{spec.kind}"
+    tail = ",".join(f"{k}={_fmt_arg(v)}" for k, v in sorted(args.items()))
+    return head + ("," + tail if tail else "")
+
+
 class ClientPopulation:
     """A virtual fleet of P x K clients with deterministic shard access.
 

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import rng_key
 from repro.configs.base import GFLConfig, INPUT_SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch import roofline as rl
@@ -131,8 +132,7 @@ def analyze(compiled, lowered, meta, *, arch, shape_name, multi_pod,
         if mem is not None and hasattr(mem, attr):
             memd[attr] = int(getattr(mem, attr))
 
-    shapes = jax.eval_shape(lambda k: Model(cfg).init(k),
-                            jax.random.PRNGKey(0))
+    shapes = jax.eval_shape(lambda k: Model(cfg).init(k), rng_key())
     n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
     n_active = rl.active_params(cfg, n_params)
     if shape.kind == "train":

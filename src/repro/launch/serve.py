@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import rng_key
 from repro.configs.registry import get_config
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.launch.train import parse_mesh
@@ -35,7 +36,7 @@ def main(argv=None):
     model = Model(cfg)
     mesh = make_production_mesh() if args.mesh == "production" \
         else parse_mesh(args.mesh)
-    key = jax.random.PRNGKey(0)
+    key = rng_key()
 
     with mesh:
         params = model.init(key)

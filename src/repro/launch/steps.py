@@ -49,6 +49,7 @@ try:                                    # jax >= 0.4.x moved this around
 except AttributeError:                  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
+from repro import rng_key
 from repro.configs.base import GFLConfig, InputShape, ModelConfig
 from repro.core.privacy.mechanism import RoundContext, mechanism_for
 from repro.core.topology import combination_matrix
@@ -676,7 +677,7 @@ def params_specs(model: Model, mesh, *, gfl_train: bool,
     """(ShapeDtypeStruct pytree, NamedSharding pytree) for the params."""
     cfg = model.cfg
     saxes = server_axes(mesh) if gfl_train else None
-    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    shapes = jax.eval_shape(lambda k: model.init(k), rng_key())
     if gfl_train:
         Pn = num_servers(mesh)
         shapes = jax.tree.map(

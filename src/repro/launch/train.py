@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import rng_key
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import GFLConfig
 from repro.configs.registry import get_config
@@ -152,10 +153,10 @@ def main(argv=None):
                if gfl_cfg.fault != "none" else None)
     with mesh:
         step = jax.jit(steps_lib.make_train_step(model, gfl_cfg, mesh))
-        state = steps_lib.init_train_state(model, gfl_cfg, mesh,
-                                           jax.random.PRNGKey(0))
+        state = steps_lib.init_train_state(model, gfl_cfg, mesh, rng_key())
         t0 = time.time()
-        sel_key = jax.random.PRNGKey(1234)
+        # cohort selection stream stays decoupled from the model-init seed
+        sel_key = rng_key(1234)
         for i in range(args.steps):
             ids = weights = None
             q_round = None

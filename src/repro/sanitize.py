@@ -1,0 +1,96 @@
+"""Runtime sanitizer mode — the dynamic counterpart to gflint.
+
+Enabled per-run via ``GFLConfig.sanitize`` or process-wide via
+``REPRO_SANITIZE=1``.  Inside :func:`sanitizer_scope` the engines run
+with ``jax_debug_key_reuse`` (typed-key reuse detection) and
+``jax_debug_nans`` turned on, and every engine cross-checks a
+:class:`ReleaseLedger` — releases performed vs releases charged to the
+accountant — so an accounting drift that static analysis cannot see
+(e.g. an engine recording the wrong number of rounds) fails loudly
+instead of silently under-reporting epsilon.
+
+Checks are deliberately O(1) per run: sanitize mode is meant to be
+cheap enough for a nightly tier-1 shard (see ``.github/workflows``).
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+ENV_FLAG = "REPRO_SANITIZE"
+_FALSY = ("", "0", "false", "False", "no")
+
+_DEBUG_FLAGS = ("jax_debug_key_reuse", "jax_debug_nans")
+
+
+class SanitizerError(AssertionError):
+    """An invariant the sanitizer enforces was violated at runtime."""
+
+
+def sanitize_enabled(cfg=None) -> bool:
+    """True when sanitize mode is on for this run (config field wins,
+    else the ``REPRO_SANITIZE`` environment flag)."""
+    if cfg is not None and getattr(cfg, "sanitize", False):
+        return True
+    return os.environ.get(ENV_FLAG, "0") not in _FALSY
+
+
+@contextmanager
+def sanitizer_scope():
+    """Enable jax's key-reuse and NaN debugging for the dynamic extent
+    of a run, restoring prior values on exit.  Flags missing from the
+    installed jax are skipped (defense in depth, not a hard dep)."""
+    import jax
+
+    previous: dict = {}
+    for flag in _DEBUG_FLAGS:
+        try:
+            previous[flag] = getattr(jax.config, flag)
+            jax.config.update(flag, True)
+        except (AttributeError, KeyError, ValueError):
+            continue
+    try:
+        yield
+    finally:
+        for flag, value in previous.items():
+            jax.config.update(flag, value)
+
+
+@dataclass
+class ReleaseLedger:
+    """Counts noise releases performed vs releases charged.
+
+    Engines record a release per protocol round actually executed and a
+    charge per accountant advance; :meth:`cross_check` raises when the
+    two diverge — the "release the accountant never heard about" bug
+    class (gflint GFL002) caught at runtime instead of in the AST.
+    """
+    released: int = 0
+    charged: int = 0
+
+    def record_release(self, n: int = 1) -> None:
+        self.released += int(n)
+
+    def record_charge(self, n: int = 1) -> None:
+        self.charged += int(n)
+
+    def charge_from(self, accountant) -> None:
+        """Record charges straight off an accountant: a
+        ``PrivacyAccountant`` exposes ``step`` (total releases charged),
+        an ``AsyncAccountant`` a per-server ``releases`` list (the
+        ledger compares against the busiest server — every flushed
+        release must be on some ledger)."""
+        if hasattr(accountant, "releases"):
+            rel = accountant.releases
+            self.record_charge(sum(rel))
+        else:
+            self.record_charge(accountant.step)
+
+    def cross_check(self) -> None:
+        if self.released != self.charged:
+            raise SanitizerError(
+                f"accountant ledger mismatch: {self.released} noise "
+                f"release(s) performed but {self.charged} charged — "
+                f"every release must be charged exactly once "
+                f"(PrivacyAccountant.advance / AsyncAccountant.record_*)")

@@ -1,0 +1,384 @@
+"""gflint rule + CLI tests: every rule fires on a seeded violation and
+stays quiet on the fixed version; the committed baseline reproduces."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis import run_analysis
+from repro.analysis.baseline import (diff_against_baseline, load_baseline,
+                                     save_baseline)
+from repro.analysis.cli import main as cli_main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+def lint(tmp_path, source, filename="mod.py", extra=None):
+    """Write fixture module(s) and run gflint over the tmp tree."""
+    (tmp_path / filename).parent.mkdir(parents=True, exist_ok=True)
+    (tmp_path / filename).write_text(textwrap.dedent(source))
+    for name, text in (extra or {}).items():
+        p = tmp_path / name
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return run_analysis([tmp_path], root=tmp_path)
+
+def rules_fired(findings):
+    return {f.rule for f in findings}
+
+# --------------------------------------------------------------- GFL001
+def test_gfl001_fires_on_key_reuse(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))
+            return a + b
+    """)
+    assert [f for f in findings if f.rule == "GFL001"], findings
+    (f,) = [f for f in findings if f.rule == "GFL001"]
+    assert "reused" in f.message and f.context == "f"
+
+def test_gfl001_quiet_with_split_or_fold_in(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (3,))
+            b = jax.random.uniform(k2, (3,))
+            c = jax.random.normal(jax.random.fold_in(key, 0), (3,))
+            d = jax.random.normal(jax.random.fold_in(key, 1), (3,))
+            return a + b + c + d
+    """)
+    assert "GFL001" not in rules_fired(findings), findings
+
+def test_gfl001_rebinding_clears_consumption(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def f(key):
+            out = 0.0
+            for i in range(3):
+                key, sub = jax.random.split(key)
+                out += jax.random.normal(sub, ())
+            return out
+    """)
+    assert "GFL001" not in rules_fired(findings), findings
+
+def test_gfl001_loop_invariant_key_caught(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def f(key):
+            out = 0.0
+            for i in range(3):
+                out += jax.random.normal(key, ())
+            return out
+    """)
+    assert "GFL001" in rules_fired(findings), findings
+
+def test_gfl001_lambda_params_are_their_own_scope(tmp_path):
+    # two vmapped lambdas both naming their key `k` are NOT reuse
+    findings = lint(tmp_path, """
+        import jax
+
+        def f(key, probs):
+            ka, kb = jax.random.split(key)
+            i = jax.vmap(lambda k: jax.random.choice(k, 5, (2,)))(
+                jax.random.split(ka, 3))
+            j = jax.vmap(lambda k, p: jax.random.choice(k, 5, (2,), p=p))(
+                jax.random.split(kb, 3), probs)
+            return i, j
+    """)
+    assert "GFL001" not in rules_fired(findings), findings
+
+def test_gfl001_literal_prngkey_fires_and_factory_is_exempt(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def init():
+            return jax.random.PRNGKey(0)
+    """)
+    assert any(f.rule == "GFL001" and "literal" in f.message
+               for f in findings), findings
+    # the approved factory file may construct literal keys
+    findings = lint(tmp_path / "factory", """
+        import jax
+
+        def rng_key(seed=0):
+            return jax.random.PRNGKey(0 if seed is None else seed)
+    """, filename="repro/__init__.py")
+    assert "GFL001" not in rules_fired(findings), findings
+
+def test_gfl001_pragma_suppresses(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def init():
+            return jax.random.PRNGKey(0)  # gflint: disable=GFL001
+    """)
+    assert "GFL001" not in rules_fired(findings), findings
+
+# --------------------------------------------------------------- GFL002
+UNCHARGED = """
+    def release_round(updates, key, mech):
+        return mech.client_protect(updates, key, None)
+
+    def caller(updates, key, mech):
+        return release_round(updates, key, mech)
+"""
+
+CHARGED = UNCHARGED + """
+    def engine(updates, key, mech, acc):
+        out = caller(updates, key, mech)
+        acc.advance(1)
+        return out
+"""
+
+def test_gfl002_fires_without_charge_path(tmp_path):
+    findings = lint(tmp_path, UNCHARGED)
+    assert any(f.rule == "GFL002" and "client_protect" in f.message
+               for f in findings), findings
+
+def test_gfl002_quiet_when_transitive_caller_charges(tmp_path):
+    findings = lint(tmp_path, CHARGED)
+    assert "GFL002" not in rules_fired(findings), findings
+
+def test_gfl002_async_charges_count(tmp_path):
+    findings = lint(tmp_path, """
+        def engine(flushed, q, mech, acc):
+            psi = mech.client_protect_masked(1.0, 2.0, None, None)
+            acc.record_schedule(flushed, q)
+            return psi
+    """)
+    assert "GFL002" not in rules_fired(findings), findings
+
+# --------------------------------------------------------------- GFL003
+def test_gfl003_fires_on_python_if_in_jit(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert any(f.rule == "GFL003" and "`if`" in f.message
+               for f in findings), findings
+
+def test_gfl003_fires_on_host_cast_and_numpy(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return float(x) + np.sum(x)
+    """)
+    msgs = [f.message for f in findings if f.rule == "GFL003"]
+    assert any("float()" in m for m in msgs), msgs
+    assert any("numpy call" in m for m in msgs), msgs
+
+def test_gfl003_fires_on_fn_passed_to_tracer(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def body(carry, x):
+            if x > 0:
+                carry = carry + x
+            return carry, x
+
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+    """)
+    assert "GFL003" in rules_fired(findings), findings
+
+def test_gfl003_static_argnames_and_structural_reads_exempt(tmp_path):
+    findings = lint(tmp_path, """
+        from functools import partial
+
+        import jax
+        import jax.numpy as jnp
+
+        @partial(jax.jit, static_argnames=("mode", "bound"))
+        def f(x, gate, mode, bound):
+            if mode == "ref":
+                return x
+            if bound > 0:
+                x = jnp.clip(x, -bound, bound)
+            if x.ndim == 3:
+                x = x.sum(0)
+            if gate is None:
+                return x
+            return jnp.where(gate, x, 0.0)
+    """)
+    assert "GFL003" not in rules_fired(findings), findings
+
+def test_gfl003_untraced_function_unflagged(tmp_path):
+    findings = lint(tmp_path, """
+        def f(x):
+            if x > 0:
+                return float(x)
+            return -x
+    """)
+    assert "GFL003" not in rules_fired(findings), findings
+
+# --------------------------------------------------------------- GFL004
+OP_OK = """
+    import jax
+    from . import ref as _ref
+
+    def round_op(x, *, backend="pallas"):
+        if backend == "ref":
+            return _ref.round_op_ref(x)
+        return x * 2
+"""
+
+def test_gfl004_fires_without_ref_counterpart(tmp_path):
+    findings = lint(tmp_path, """
+        def round_op(x, *, backend="pallas"):
+            return x * 2
+    """, extra={"tests/test_ops.py": "from mod import round_op\n"})
+    msgs = [f.message for f in findings if f.rule == "GFL004"]
+    assert any("no ref counterpart" in m for m in msgs), findings
+
+def test_gfl004_fires_without_parity_test(tmp_path):
+    findings = lint(tmp_path, OP_OK)
+    msgs = [f.message for f in findings if f.rule == "GFL004"]
+    assert any("no parity test" in m for m in msgs), findings
+
+def test_gfl004_quiet_with_ref_and_test(tmp_path):
+    findings = lint(tmp_path, OP_OK, extra={
+        "tests/test_ops.py": "from mod import round_op\n"})
+    assert "GFL004" not in rules_fired(findings), findings
+
+def test_gfl004_private_helpers_exempt(tmp_path):
+    findings = lint(tmp_path, """
+        def _resolve(backend, interpret):
+            return backend == "ref" or interpret
+    """)
+    assert "GFL004" not in rules_fired(findings), findings
+
+# --------------------------------------------------------------- GFL005
+def test_gfl005_fires_on_unregistered_parser(tmp_path):
+    findings = lint(tmp_path, """
+        def parse_widget_spec(spec):
+            return spec.split(":")
+    """)
+    assert any(f.rule == "GFL005" and "parse_widget_spec" in f.message
+               for f in findings), findings
+
+def test_gfl005_quiet_when_registered_and_registry_tested(tmp_path):
+    findings = lint(tmp_path, """
+        def parse_widget_spec(spec):
+            return spec.split(":")
+
+        def widget_to_spec(parts):
+            return ":".join(parts)
+    """, extra={
+        "registry.py": """
+            from mod import parse_widget_spec, widget_to_spec
+
+            def register_grammar(name, parse, to_spec):
+                return (name, parse, to_spec)
+
+            register_grammar("widget", parse_widget_spec, widget_to_spec)
+        """,
+        "tests/test_specs.py": """
+            def test_round_trips(all_grammars):
+                pass
+        """,
+    })
+    assert "GFL005" not in rules_fired(findings), findings
+
+def test_gfl005_fires_on_registered_but_untested_grammar(tmp_path):
+    findings = lint(tmp_path, """
+        def parse_widget_spec(spec):
+            return spec.split(":")
+
+        def register_grammar(name, parse, to_spec):
+            return (name, parse, to_spec)
+
+        register_grammar("widget", parse_widget_spec, str)
+    """)
+    assert any(f.rule == "GFL005" and "widget" in f.message
+               and "round-trip" in f.message for f in findings), findings
+
+# ---------------------------------------------------------- baseline/CLI
+def test_baseline_roundtrip_and_diff(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def init():
+            return jax.random.PRNGKey(7)
+    """)
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, findings)
+    loaded = load_baseline(bl)
+    new, stale, matched = diff_against_baseline(findings, loaded)
+    assert not new and not stale and len(matched) == len(findings)
+    # a fixed finding becomes a stale entry
+    new, stale, matched = diff_against_baseline([], loaded)
+    assert not new and len(stale) == len(findings)
+    # line moves don't churn the match
+    import dataclasses
+    moved = [dataclasses.replace(f, line=f.line + 40) for f in findings]
+    new, stale, matched = diff_against_baseline(moved, loaded)
+    assert not new and not stale
+
+def test_cli_exit_codes(tmp_path):
+    (tmp_path / "mod.py").write_text(
+        "import jax\n\ndef f():\n    return jax.random.PRNGKey(3)\n")
+    bl = tmp_path / "baseline.json"
+    assert cli_main([str(tmp_path), "--root", str(tmp_path),
+                     "--no-baseline"]) == 1
+    assert cli_main([str(tmp_path), "--root", str(tmp_path),
+                     "--baseline", str(bl), "--write-baseline"]) == 0
+    assert cli_main([str(tmp_path), "--root", str(tmp_path),
+                     "--baseline", str(bl)]) == 0
+    # fixing the finding leaves a stale entry -> nonzero until refreshed
+    (tmp_path / "mod.py").write_text("def f():\n    return 3\n")
+    assert cli_main([str(tmp_path), "--root", str(tmp_path),
+                     "--baseline", str(bl)]) == 1
+    assert cli_main([str(tmp_path), "--root", str(tmp_path),
+                     "--baseline", str(bl), "--write-baseline"]) == 0
+    assert cli_main([str(tmp_path), "--root", str(tmp_path),
+                     "--baseline", str(bl)]) == 0
+
+def test_cli_json_format(tmp_path, capsys):
+    (tmp_path / "mod.py").write_text(
+        "import jax\nK = jax.random.PRNGKey(3)\n")
+    code = cli_main([str(tmp_path), "--root", str(tmp_path),
+                     "--no-baseline", "--format", "json"])
+    out = json.loads(capsys.readouterr().out)
+    assert code == 1 and out["new"] and out["stale"] == []
+
+def test_parse_error_reported_not_crashing(tmp_path):
+    findings = lint(tmp_path, "def broken(:\n")
+    assert any(f.rule == "GFL000" for f in findings), findings
+
+# ----------------------------------------------------------- self-check
+def test_committed_baseline_exactly_reproduced():
+    """gflint over the real src/ must match analysis/baseline.json with
+    zero new findings and zero stale entries."""
+    findings = run_analysis([REPO_ROOT / "src"], root=REPO_ROOT)
+    baseline = load_baseline(REPO_ROOT / "analysis" / "baseline.json")
+    new, stale, matched = diff_against_baseline(findings, baseline)
+    assert not new, [f.render() for f in new]
+    assert not stale, stale
+    for entry in baseline.values():
+        assert entry["justification"].strip() and \
+            "TODO" not in entry["justification"]
+
+def test_cli_runs_as_module():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--baseline",
+         "analysis/baseline.json", "src"],
+        cwd=REPO_ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 new" in proc.stdout

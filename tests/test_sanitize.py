@@ -1,0 +1,112 @@
+"""Runtime sanitizer mode: flag scoping, ledger cross-checks, and the
+always-on engine accounting the sanitizer verifies."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import GFLConfig
+from repro.core.events.engine import run_gfl_async
+from repro.core.population.engine import run_gfl_population
+from repro.sanitize import (ENV_FLAG, ReleaseLedger, SanitizerError,
+                            sanitize_enabled, sanitizer_scope)
+
+CFG = GFLConfig(num_servers=3, clients_per_server=4, clients_sampled=2,
+                population="synthetic:iid,sigma=1.0,n=20,dim=4")
+
+
+def test_sanitize_enabled_sources(monkeypatch):
+    monkeypatch.delenv(ENV_FLAG, raising=False)
+    assert not sanitize_enabled()
+    assert not sanitize_enabled(CFG)
+    assert sanitize_enabled(dataclasses.replace(CFG, sanitize=True))
+    monkeypatch.setenv(ENV_FLAG, "1")
+    assert sanitize_enabled()
+    assert sanitize_enabled(CFG)
+    monkeypatch.setenv(ENV_FLAG, "0")
+    assert not sanitize_enabled(CFG)
+
+
+def test_sanitizer_scope_sets_and_restores_flags():
+    before = (jax.config.jax_debug_nans, jax.config.jax_debug_key_reuse)
+    with sanitizer_scope():
+        assert jax.config.jax_debug_nans
+        assert jax.config.jax_debug_key_reuse
+    after = (jax.config.jax_debug_nans, jax.config.jax_debug_key_reuse)
+    assert after == before
+
+
+def test_sanitizer_scope_catches_nan():
+    import jax.numpy as jnp
+    with sanitizer_scope():
+        with pytest.raises(FloatingPointError):
+            jax.jit(lambda x: jnp.log(x))(-1.0).block_until_ready()
+
+
+def test_ledger_cross_check():
+    led = ReleaseLedger()
+    led.record_release(4)
+    led.record_charge(4)
+    led.cross_check()
+    led.record_release()
+    with pytest.raises(SanitizerError):
+        led.cross_check()
+
+
+def test_ledger_charge_from_accountants():
+    class Sync:
+        step = 5
+
+    class Async:
+        releases = [2, 3, 1]
+
+    led = ReleaseLedger()
+    led.charge_from(Sync())
+    assert led.charged == 5
+    led = ReleaseLedger()
+    led.charge_from(Async())
+    assert led.charged == 6
+
+
+# ------------------------------------------------ engine integration
+def test_population_run_attaches_charged_accountant():
+    res = run_gfl_population(None, CFG, iters=5, batch_size=2)
+    assert res.accountant is not None
+    assert res.accountant.step == 5
+    assert len(res.accountant.q_history) == 5
+    np.testing.assert_allclose(res.accountant.q_history, res.q)
+    assert res.accountant.epsilon() > 0
+
+
+def test_population_run_under_sanitize_mode():
+    cfg = dataclasses.replace(CFG, sanitize=True)
+    res = run_gfl_population(None, cfg, iters=4, batch_size=2)
+    assert res.accountant.step == 4
+    assert np.all(np.isfinite(res.msd))
+    # flags restored after the run
+    assert not jax.config.jax_debug_nans
+
+
+def test_population_sanitize_env_flag(monkeypatch):
+    monkeypatch.setenv(ENV_FLAG, "1")
+    res = run_gfl_population(None, CFG, iters=3, batch_size=2)
+    assert res.accountant.step == 3
+
+
+def test_async_run_attaches_schedule_charged_accountant():
+    cfg = dataclasses.replace(
+        CFG, async_spec="async:buffer=2,latency=fixed:1,max_stale=4",
+        sanitize=True)
+    res = run_gfl_async(None, cfg, ticks=6, batch_size=2)
+    assert res.accountant is not None
+    # every realized flush is charged to its server's ledger
+    np.testing.assert_array_equal(res.accountant.releases, res.releases)
+    assert res.accountant.epsilon() > 0
+
+
+def test_weighted_path_realized_q_matches_accountant():
+    cfg = dataclasses.replace(CFG, cohort="importance,floor=0.2",
+                              sanitize=True)
+    res = run_gfl_population(None, cfg, iters=3, batch_size=2)
+    np.testing.assert_allclose(res.accountant.q_history, res.q)
