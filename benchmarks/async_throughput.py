@@ -25,7 +25,6 @@ rows for the harness (benchmarks/run.py).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -121,11 +120,10 @@ def run(quick: bool = False, reduced: bool = False,
     assert len({r["buffer"] for r in rows}) >= 3, \
         "the sweep must cover >= 3 buffer sizes"
 
-    with open(OUT, "w") as f:
-        json.dump({"benchmark": "async_throughput", "reduced": reduced,
-                   "P": P, "K": K, "rate": rate, "ticks": ticks,
-                   "sync": sync_row, "rows": rows}, f, indent=2)
-        f.write("\n")
+    from benchmarks.meta import write_bench
+    write_bench(OUT, {"benchmark": "async_throughput", "reduced": reduced,
+                      "P": P, "K": K, "rate": rate, "ticks": ticks,
+                      "sync": sync_row, "rows": rows})
 
     out = [("async_throughput/sync_events_per_sec",
             sync_row["events_per_sec"]),

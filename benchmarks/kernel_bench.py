@@ -24,7 +24,6 @@ the round trips of the reference chain) and the measured round speedup
 """
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
@@ -217,9 +216,8 @@ def _write_json(report, reduced: bool):
                  "round-trip accounting from launch/roofline.py"),
         "rows": report,
     }
-    out = REPO_ROOT / "BENCH_kernels.json"
-    out.write_text(json.dumps(payload, indent=1) + "\n")
-    return out
+    from benchmarks.meta import write_bench
+    return write_bench(REPO_ROOT / "BENCH_kernels.json", payload)
 
 
 def main(argv=None):

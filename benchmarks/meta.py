@@ -1,0 +1,84 @@
+"""Shared benchmark provenance: one metadata block for every BENCH_*.json.
+
+Every benchmark that persists a repo-root ``BENCH_<name>.json`` routes its
+payload through :func:`write_bench`, which stamps a common ``meta`` block
+(host, backend, jax/jaxlib versions, git sha, timestamp) so perf
+trajectories across commits stay attributable to the machine and revision
+that produced them.  :func:`write_index` scans the repo root and rebuilds
+``BENCH_index.json`` — the one-stop catalog the CI artifacts and the docs
+link to.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _git_sha() -> str:
+    try:
+        proc = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                              capture_output=True, text=True, timeout=10)
+        sha = proc.stdout.strip()
+        return sha if proc.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bench_metadata() -> dict:
+    """The provenance block stamped into every benchmark payload."""
+    import jax
+    import jaxlib
+    return {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "git_sha": _git_sha(),
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kinds": sorted({d.device_kind for d in jax.devices()}),
+    }
+
+
+def write_bench(path, payload: dict) -> Path:
+    """Write one BENCH_*.json with the shared ``meta`` block attached."""
+    path = Path(path)
+    payload = dict(payload)
+    payload.setdefault("meta", bench_metadata())
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
+
+
+def write_index(root=REPO_ROOT) -> Path:
+    """Rebuild BENCH_index.json from the BENCH_*.json files under `root`."""
+    root = Path(root)
+    entries = []
+    for f in sorted(root.glob("BENCH_*.json")):
+        if f.name == "BENCH_index.json":
+            continue
+        try:
+            doc = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError):
+            entries.append({"file": f.name, "error": "unreadable"})
+            continue
+        meta = doc.get("meta", {})
+        entries.append({
+            "file": f.name,
+            "benchmark": doc.get("benchmark") or doc.get("bench") or f.stem,
+            "reduced": doc.get("reduced"),
+            "git_sha": meta.get("git_sha"),
+            "timestamp": meta.get("timestamp"),
+            "backend": meta.get("backend"),
+        })
+    out = root / "BENCH_index.json"
+    out.write_text(json.dumps({"benchmarks": entries,
+                               "meta": bench_metadata()}, indent=2) + "\n")
+    return out

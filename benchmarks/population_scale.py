@@ -24,7 +24,6 @@ perf trajectory) and prints ``name,value`` rows for the harness
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -127,11 +126,10 @@ def run(quick: bool = False, reduced: bool = False, iters: int | None = None,
     rows = [bench_one(K, P=P, L=min(L, K), N=N, iters=iters,
                       batch_size=batch_size) for K in VIRTUAL_KS]
 
-    with open(OUT, "w") as f:
-        json.dump({"benchmark": "population_scale",
-                   "reduced": bool(quick or reduced),
-                   "rows": rows}, f, indent=2)
-        f.write("\n")
+    from benchmarks.meta import write_bench
+    write_bench(OUT, {"benchmark": "population_scale",
+                      "reduced": bool(quick or reduced),
+                      "rows": rows})
 
     out = []
     for r in rows:

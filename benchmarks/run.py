@@ -20,7 +20,8 @@ def main(argv=None):
 
     from benchmarks import (async_throughput, fault_sweep, fig2_convergence,
                             kernel_bench, noise_sweep, population_scale,
-                            privacy_epsilon, roofline_report)
+                            privacy_epsilon, roofline_report,
+                            telemetry_overhead)
     benches = {
         "fig2_convergence": fig2_convergence.run,     # paper Fig. 2
         "noise_sweep": noise_sweep.run,               # Fig. 2 right, extended
@@ -32,6 +33,8 @@ def main(argv=None):
         "kernel_round": kernel_bench.run_round,       # fused round pipeline
                                                       # (writes BENCH_kernels)
         "roofline_report": roofline_report.run,       # deliverable (g)
+        "telemetry_overhead": telemetry_overhead.run,  # docs/observability.md
+                                                       # (writes BENCH_telemetry)
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -50,6 +53,9 @@ def main(argv=None):
             failures += 1
             print(f"{name},FAILED,{time.time()-t0:.1f}", file=sys.stderr)
             traceback.print_exc()
+    # refresh the BENCH_index.json catalog over whatever landed on disk
+    from benchmarks.meta import write_index
+    write_index()
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,90 @@
+"""Telemetry overhead: population CPU smoke, telemetry on vs off.
+
+The observability contract (docs/observability.md) is two-sided:
+``telemetry=off`` must be bit-identical to an uninstrumented run (a
+regression test owns that half), and ``telemetry=on`` must stay cheap
+enough to leave enabled on real runs.  This bench measures the second
+half: the same population-engine scan run — the executor with the
+densest in-graph tap (an ordered ``io_callback`` flush per round) —
+timed with telemetry off and with a memory sink attached.  Best-of-N
+wall clock per arm, compile excluded via a warmup run.
+
+Writes the repo-root ``BENCH_telemetry.json`` and prints ``name,value``
+rows; the measured overhead_pct is the number docs/observability.md
+quotes (acceptance: < 15% on the CPU smoke).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.meta import REPO_ROOT, write_bench
+from repro.configs.base import GFLConfig
+from repro.core.population import (
+    SyntheticPopulation,
+    estimate_w_ref,
+    run_gfl_population,
+)
+
+OUT = REPO_ROOT / "BENCH_telemetry.json"
+
+
+def _time_arm(pop, cfg, *, iters, batch_size, w_ref, repeats):
+    """Best-of-`repeats` wall seconds for one telemetry arm (post-warmup)."""
+    run_gfl_population(pop, cfg, iters=iters, batch_size=batch_size,
+                       seed=0, scan=True, w_ref=w_ref)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        res = run_gfl_population(pop, cfg, iters=iters,
+                                 batch_size=batch_size, seed=0, scan=True,
+                                 w_ref=w_ref)
+        jax.block_until_ready(res.params)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(quick: bool = False):
+    P, K, L = 4, 50, 5
+    N = 50
+    iters = 30 if quick else 100
+    repeats = 3 if quick else 5
+    batch_size = 10
+
+    pop = SyntheticPopulation(P, K, mode="hetero", N=N, M=2, data_seed=0)
+    base = dict(num_servers=P, clients_per_server=K, clients_sampled=L,
+                topology="ring", privacy="hybrid", sigma_g=0.2, mu=0.1,
+                grad_bound=10.0)
+    w_ref = estimate_w_ref(pop, sample_clients=8, iters=200)
+
+    off_s = _time_arm(pop, GFLConfig(**base, telemetry="off"),
+                      iters=iters, batch_size=batch_size, w_ref=w_ref,
+                      repeats=repeats)
+    on_s = _time_arm(pop, GFLConfig(**base, telemetry="memory"),
+                     iters=iters, batch_size=batch_size, w_ref=w_ref,
+                     repeats=repeats)
+    overhead_pct = 100.0 * (on_s - off_s) / off_s
+
+    write_bench(OUT, {
+        "benchmark": "telemetry_overhead",
+        "reduced": bool(quick),
+        "P": P, "K": K, "L": L, "N": N, "iters": iters,
+        "repeats": repeats, "batch_size": batch_size,
+        "off_seconds": off_s, "on_seconds": on_s,
+        "overhead_pct": overhead_pct,
+        "sink": "memory",
+        "note": ("population scan executor; the on arm carries the "
+                 "MetricsStream pytree and flushes one ordered "
+                 "io_callback per round into a memory sink"),
+    })
+
+    return [("telemetry_overhead/off_s", off_s),
+            ("telemetry_overhead/on_s", on_s),
+            ("telemetry_overhead/overhead_pct", overhead_pct)]
+
+
+if __name__ == "__main__":
+    for name, val in run(quick=True):
+        print(f"{name},{val:.4g}")
+    print(f"wrote {OUT}")

@@ -2,13 +2,14 @@
 from __future__ import annotations
 
 from repro.analysis.rules.accounting import AccountantCoverageRule
+from repro.analysis.rules.callbacks import CallbackRoutingRule
 from repro.analysis.rules.keys import KeyHygieneRule
 from repro.analysis.rules.parity import BackendParityRule
 from repro.analysis.rules.specs import SpecRoundTripRule
 from repro.analysis.rules.tracing import TraceSafetyRule
 
 ALL_RULES = (KeyHygieneRule, AccountantCoverageRule, TraceSafetyRule,
-             BackendParityRule, SpecRoundTripRule)
+             BackendParityRule, SpecRoundTripRule, CallbackRoutingRule)
 
 
 def default_rules():

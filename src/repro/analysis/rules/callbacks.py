@@ -1,0 +1,95 @@
+"""GFL006 — host-callback routing.
+
+A raw ``jax.experimental.io_callback`` / ``jax.pure_callback`` /
+``jax.debug.callback`` inside a traced body (``jit`` / ``scan`` /
+Pallas kernels) is an unmanaged side channel: it bypasses the telemetry
+session gate, so it fires even on "telemetry off" runs, is not schema
+validated, and its host work cannot be accounted for by the overhead
+contract of docs/observability.md.  PR 7's rule: in-graph host
+callbacks must route through :mod:`repro.telemetry` (``emit`` /
+``MetricsStream``), which owns the single sanctioned ``io_callback``
+call site — or carry an explicit ``# gflint: disable=GFL006`` pragma
+with the justification reviewed like any other baseline entry.
+
+The telemetry package itself is exempt (it IS the routing point), as is
+any module whose path contains a ``telemetry`` component.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.framework import (AnalysisContext, Finding, Rule,
+                                      dotted_name)
+from repro.analysis.rules.tracing import (_decorator_trace_info,
+                                          _names_passed_to_tracers)
+
+# callee tails that perform a host callback from a traced body
+CALLBACK_TAILS = frozenset({"io_callback", "pure_callback",
+                            "debug_callback"})
+# ``jax.debug.callback`` has the generic tail "callback" — match it only
+# with its qualifying prefix so ordinary ``obj.callback(...)`` calls on
+# user objects stay out of scope
+_DEBUG_CALLBACK_SUFFIX = "debug.callback"
+
+
+def _is_callback_call(call: ast.Call) -> bool:
+    name = dotted_name(call.func)
+    if name is None:
+        return False
+    tail = name.split(".")[-1]
+    if tail in CALLBACK_TAILS:
+        return True
+    return name == "callback" or name.endswith("." + _DEBUG_CALLBACK_SUFFIX) \
+        or name == _DEBUG_CALLBACK_SUFFIX
+
+
+def _is_exempt_module(path: str) -> bool:
+    parts = path.split("/")
+    return "telemetry" in parts
+
+
+class CallbackRoutingRule(Rule):
+    id = "GFL006"
+    title = "in-graph host callbacks must route through repro.telemetry"
+
+    def check(self, ctx: AnalysisContext) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for mod in ctx.source_modules():
+            if _is_exempt_module(mod.path):
+                continue
+            passed = _names_passed_to_tracers(mod.tree)
+            for fn in ast.walk(mod.tree):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                traced, _, _ = _decorator_trace_info(fn)
+                if not traced and fn.name not in passed:
+                    continue
+                findings.extend(self._check_fn(fn, mod))
+        return findings
+
+    def _check_fn(self, fn, mod) -> Iterable[Finding]:
+        ctxname = mod.context_of(fn)
+        qual = ctxname + "." + fn.name if ctxname else fn.name
+
+        def own_nodes(owner):
+            stack = list(ast.iter_child_nodes(owner))
+            while stack:
+                node = stack.pop()
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                yield node
+                stack.extend(ast.iter_child_nodes(node))
+
+        for node in own_nodes(fn):
+            if isinstance(node, ast.Call) and _is_callback_call(node):
+                name = dotted_name(node.func) or "callback"
+                yield Finding(
+                    self.id, mod.path, node.lineno, node.col_offset,
+                    mod.context_of(node),
+                    f"raw host callback {name}() inside traced body {qual} "
+                    f"— bypasses the telemetry session gate and schema; "
+                    f"route through repro.telemetry.emit / MetricsStream "
+                    f"(docs/observability.md)")

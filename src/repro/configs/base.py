@@ -257,6 +257,12 @@ class GFLConfig:
                                      # cross-check the release/charge ledger
                                      # (repro.sanitize; REPRO_SANITIZE=1
                                      # enables it process-wide)
+    telemetry: str = "off"           # telemetry sink spec for engine runs:
+                                     # "off" (default; bit-identical to an
+                                     # uninstrumented run) or a "+"-joined
+                                     # jsonl[:path]|csv[:base]|memory|
+                                     # console[:every] spec (repro.telemetry;
+                                     # REPRO_TELEMETRY overrides "off")
 
     @property
     def effective_clients(self) -> int:

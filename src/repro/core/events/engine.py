@@ -73,6 +73,8 @@ from repro.core.events.spec import AsyncSpec, parse_async_spec
 from repro.core.population.cohort import AvailabilityTrace, parse_cohort_spec
 from repro.sanitize import (ReleaseLedger, SanitizerError,
                             sanitize_enabled, sanitizer_scope)
+from repro.telemetry import (MetricsStream, RunLog, session_from_config,
+                             telemetry_active, trace_span)
 from repro.core.population.engine import (
     as_population,
     estimate_w_ref,
@@ -326,14 +328,17 @@ def run_gfl_async(source, cfg: GFLConfig, *, ticks: int,
     performed are cross-checked against the accountant's ledgers.
     """
     sanitize = sanitize_enabled(cfg)
-    with sanitizer_scope() if sanitize else nullcontext():
-        res = _run_async_impl(
-            source, cfg, ticks=ticks, batch_size=batch_size, seed=seed,
-            A=A, process=process, spec=spec, scheduler=scheduler,
-            w_ref=w_ref, scan=scan)
-    P = res.flushed.shape[1]
-    acc = mechanism_for(cfg).async_accountant(P)
-    acc.record_schedule(np.asarray(res.flushed), np.asarray(res.q))
+    with session_from_config(cfg):
+        with sanitizer_scope() if sanitize else nullcontext():
+            with trace_span("async_run", ticks=ticks, scan=scan):
+                res = _run_async_impl(
+                    source, cfg, ticks=ticks, batch_size=batch_size,
+                    seed=seed, A=A, process=process, spec=spec,
+                    scheduler=scheduler, w_ref=w_ref, scan=scan)
+        P = res.flushed.shape[1]
+        acc = mechanism_for(cfg).async_accountant(P)
+        with trace_span("privacy_accounting", ticks=ticks):
+            acc.record_schedule(np.asarray(res.flushed), np.asarray(res.q))
     if sanitize:
         ledger = ReleaseLedger()
         ledger.record_release(int(np.asarray(res.flushed).sum()))
@@ -440,31 +445,59 @@ def _run_async_impl(source, cfg: GFLConfig, *, ticks: int,
         if process is not None and not process.static:
             xs = xs + (jnp.stack([tick_A(t) for t in range(ticks)]),)
 
+        # in-graph metrics: a MetricsStream pytree rides the scan carry
+        # ONLY when a telemetry session is active — the off-path carry is
+        # exactly the uninstrumented (key, state) structure
+        ms = (MetricsStream("step", cumulative={"events_total": "events"})
+              if telemetry_active() else None)
+
         def body(carry, x):
-            loop_key, st = carry
+            loop_key, st = carry[0], carry[1]
             loop_key, kb = jax.random.split(loop_key)
             A_t = x[2] if len(x) > 2 else Aj
             st, out = tick(st, kb, x[0], x[1], A_t)
-            return (loop_key, st), out
+            if ms is None:
+                return (loop_key, st), out
+            msd_t, do_flush, q_flush, mean_age, n_valid, dropped_t = out
+            acc = ms.tap(carry[2], {
+                "step": st.step, "msd": msd_t,
+                "flushed": do_flush.sum().astype(jnp.int32),
+                "events": n_valid.sum().astype(jnp.int32),
+                "dropped": dropped_t.sum().astype(jnp.int32),
+                "staleness": jnp.mean(mean_age)})
+            return (loop_key, st, acc), out
 
-        (_, state), outs = jax.lax.scan(body, (key, state), xs)
+        carry0 = ((key, state) if ms is None
+                  else (key, state, ms.init()))
+        with trace_span("async_scan", ticks=ticks):
+            final, outs = jax.lax.scan(body, carry0, xs)
+        state = final[1]
         msd, flushed, q, stale, events, dropped = (np.asarray(o)
                                                    for o in outs)
-        return AsyncRunResult(msd, state.params, flushed.astype(bool), q,
-                              stale, events, dropped, gaps, spec)
+    else:
+        tick_j = jax.jit(tick)
+        rows = []
+        for t in range(ticks):
+            key, kb = jax.random.split(key)
+            u, ag = queue.realize(t)
+            state, out = tick_j(state, kb, jnp.asarray(u), jnp.asarray(ag),
+                                tick_A(t))
+            rows.append(tuple(np.asarray(o) for o in out))
+        msd, flushed, q, stale, events, dropped = (np.stack(col)
+                                                   for col in zip(*rows))
 
-    tick_j = jax.jit(tick)
-    rows = []
-    for t in range(ticks):
-        key, kb = jax.random.split(key)
-        u, ag = queue.realize(t)
-        state, out = tick_j(state, kb, jnp.asarray(u), jnp.asarray(ag),
-                            tick_A(t))
-        rows.append(tuple(np.asarray(o) for o in out))
-    msd, flushed, q, stale, events, dropped = (np.stack(col)
-                                               for col in zip(*rows))
-    return AsyncRunResult(msd, state.params, flushed.astype(bool), q,
-                          stale, events, dropped, gaps, spec)
+    log = RunLog("async")
+    cols = {"msd": msd, "flushed": flushed.astype(np.int32), "q_server": q,
+            "staleness": stale, "events": events.astype(np.int32),
+            "dropped_stale": dropped.astype(np.int32)}
+    if gaps is not None:
+        cols["gap"] = gaps
+    log.extend_arrays(cols)
+    return AsyncRunResult(np.asarray(msd), state.params,
+                          np.asarray(log.stack("flushed")).astype(bool),
+                          log.stack("q_server"), log.stack("staleness"),
+                          log.stack("events"), log.stack("dropped_stale"),
+                          log.stack("gap"), spec)
 
 
 def _run_lockstep_loop(pop, cfg, Aj, process, grad_fn, spec, batch_size,
@@ -481,24 +514,26 @@ def _run_lockstep_loop(pop, cfg, Aj, process, grad_fn, spec, batch_size,
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
     state = gfl.init_state(k_init, P, pop.dim)
-    msd = []
-    gaps = [] if process is not None else None
+    log = RunLog("async")
+    q_tick = min(1.0, E / K)
+    flushed_row = np.ones(P, np.int32)
     for t in range(ticks):
         key, kb = jax.random.split(key)
         state = step(state, sample(kb))
-        if gaps is not None:
-            gaps.append(process.realize(t).gap)
+        gap = process.realize(t).gap if process is not None else None
         wc = gfl.centroid(state.params)
-        msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
+        log.row(t, msd=float(jnp.sum((wc - w_ref_j) ** 2)), gap=gap,
+                flushed=flushed_row, q_server=np.full(P, q_tick),
+                events=np.full(P, E, np.int32), cohort=E)
     T = ticks
     return AsyncRunResult(
-        msd=np.asarray(msd), params=state.params,
-        flushed=np.ones((T, P), bool),
-        q=np.full((T, P), min(1.0, E / K)),
+        msd=np.asarray(log.stack("msd")), params=state.params,
+        flushed=np.asarray(log.stack("flushed")).astype(bool),
+        q=np.asarray(log.stack("q_server")),
         staleness=np.zeros((T, P), np.float32),
-        events=np.full((T, P), E, np.int32),
+        events=np.asarray(log.stack("events")),
         dropped_stale=np.zeros((T, P), np.int32),
-        gaps=None if gaps is None else np.asarray(gaps), spec=spec)
+        gaps=log.stack("gap"), spec=spec)
 
 
 # ---------------------------------------------------------------------------

@@ -240,6 +240,14 @@ def make_gfl_step(A, grad_fn: Callable, cfg: GFLConfig):
             new_params = gfl_round(state.params, batch, sub, A=A,
                                    grad_fn=grad_fn, cfg=cfg, mechanism=mech,
                                    step=state.step)
+        # read-only in-graph tap (repro.telemetry): nothing is inserted
+        # when no session is active — `step` is re-jitted per make_gfl_step
+        # call, so the emit decision is taken fresh for every run
+        from repro.telemetry import emit
+        emit("step", {
+            "step": state.step + 1,
+            "update_norm": jnp.linalg.norm(new_params - state.params),
+            "param_norm": jnp.linalg.norm(new_params)})
         return GFLState(new_params, state.step + 1, key)
 
     return step

@@ -54,6 +54,8 @@ from repro.core.population.population import (
 from repro.core.privacy.mechanism import RoundContext, mechanism_for
 from repro.core.resilience.process import TopologyProcess
 from repro.sanitize import ReleaseLedger, sanitize_enabled, sanitizer_scope
+from repro.telemetry import (RunLog, emit, session_from_config,
+                             telemetry_active, trace_span)
 from repro.core.simulate import (
     _solve_global,
     base_combination_matrix,
@@ -245,15 +247,19 @@ def run_gfl_population(source, cfg: GFLConfig, *, iters: int,
     and the release/charge ledger is cross-checked.
     """
     sanitize = sanitize_enabled(cfg)
-    with sanitizer_scope() if sanitize else nullcontext():
-        res = _run_population_impl(
-            source, cfg, iters=iters, batch_size=batch_size, seed=seed,
-            record_every=record_every, A=A, process=process,
-            scheduler=scheduler, w_ref=w_ref, scan=scan)
-    acc = mechanism_for(cfg).accountant()
-    acc.sampling_rate = res.scheduler.L / res.scheduler.K
-    for qi in np.asarray(res.q):
-        acc.advance(1, q=float(qi))
+    with session_from_config(cfg):
+        with sanitizer_scope() if sanitize else nullcontext():
+            with trace_span("population_run", iters=iters, scan=scan):
+                res = _run_population_impl(
+                    source, cfg, iters=iters, batch_size=batch_size,
+                    seed=seed, record_every=record_every, A=A,
+                    process=process, scheduler=scheduler, w_ref=w_ref,
+                    scan=scan)
+        acc = mechanism_for(cfg).accountant()
+        acc.sampling_rate = res.scheduler.L / res.scheduler.K
+        with trace_span("privacy_accounting", releases=iters):
+            for qi in np.asarray(res.q):
+                acc.advance(1, q=float(qi))
     if sanitize:
         ledger = ReleaseLedger()
         ledger.record_release(iters)   # one client-level release per round
@@ -313,17 +319,21 @@ def _run_population_impl(source, cfg: GFLConfig, *, iters: int,
                     "combine_every=1 pure path; use scan=False")
             msd, params = _run_pure_scan(pop, cfg, A, grad_fn, L,
                                          batch_size, iters, seed, w_ref_j)
-            msd = msd[::record_every]
             q = np.full(iters, L / K)
+            log = RunLog("population")
+            log.extend_arrays({"msd": np.asarray(msd), "q": q,
+                               "cohort": np.full(iters, L)})
+            msd = msd[::record_every]
             scheduler.q_history.extend(q.tolist())
             return PopulationRunResult(np.asarray(msd), params, q, scheduler)
-        msd, params, gaps, staleness = _run_pure_loop(
+        log, params = _run_pure_loop(
             pop, cfg, A, process, grad_fn, L, batch_size, iters, seed,
             record_every, w_ref_j)
         q = np.full(iters, L / K)
         scheduler.q_history.extend(q.tolist())
-        return PopulationRunResult(np.asarray(msd), params, q, scheduler,
-                                   gaps=gaps, staleness=staleness)
+        return PopulationRunResult(log.stack("msd"), params, q, scheduler,
+                                   gaps=log.stack("gap"),
+                                   staleness=log.stack("staleness"))
 
     # ------------------------------------------------------- weighted path
     if scan:
@@ -351,16 +361,14 @@ def _run_population_impl(source, cfg: GFLConfig, *, iters: int,
     key, k_init = jax.random.split(key)
     state = gfl.init_state(k_init, P, pop.dim)
     params = state.params
-    msd = []
-    gaps = [] if process is not None else None
+    log = RunLog("population")
     for i in range(iters):
         key, sub = jax.random.split(key)
         k_sel, k_round = jax.random.split(sub)
         sel = scheduler.select(k_sel, i)
         A_r = (jnp.asarray(process.realize(i).A, jnp.float32)
                if process is not None and not process.static else Aj)
-        if gaps is not None:
-            gaps.append(process.realize(i).gap)
+        gap = process.realize(i).gap if process is not None else None
         weights = (sel.weights if sel.weights is not None
                    else jnp.ones((P, L)))
         alive = (sel.alive if sel.alive is not None
@@ -368,46 +376,55 @@ def _run_population_impl(source, cfg: GFLConfig, *, iters: int,
         params, norms = round_fn(params, k_round, jnp.asarray(i, jnp.int32),
                                  A_r, sel.client_idx, weights, alive)
         scheduler.observe(sel.client_idx, norms)
+        msd = None
         if i % record_every == 0:
             wc = gfl.centroid(params)
-            msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
-    return PopulationRunResult(np.asarray(msd), params,
+            msd = float(jnp.sum((wc - w_ref_j) ** 2))
+        norm_mean = norm_max = None
+        if telemetry_active():      # extra device syncs only when observed
+            norm_mean = float(jnp.mean(norms))
+            norm_max = float(jnp.max(norms))
+        log.row(i, msd=msd, gap=gap, q=scheduler.q_history[-1],
+                cohort=L, grad_norm_mean=norm_mean, grad_norm_max=norm_max)
+    return PopulationRunResult(log.stack("msd"), params,
                                np.asarray(scheduler.q_history[-iters:]),
-                               scheduler,
-                               gaps=(None if gaps is None
-                                     else np.asarray(gaps)))
+                               scheduler, gaps=log.stack("gap"))
 
 
 def _run_pure_loop(pop, cfg, A, process, grad_fn, L, batch_size, iters,
                    seed, record_every, w_ref_j):
     """The dense simulator's loop verbatim, over the population gather.
 
-    With a fault process the resilience runtime's per-round realizations
-    are surfaced instead of dropped: returns (msd, params, gaps [iters],
-    staleness [iters, P]); without one, (msd, params, None, None)."""
-    if process is not None:
-        step = gfl.make_gfl_step(process, grad_fn, cfg)
-    else:
-        step = gfl.make_gfl_step(jnp.asarray(A), grad_fn, cfg)
+    Returns (:class:`~repro.telemetry.RunLog`, params): per-round records
+    carry msd (every ``record_every``) and, with a fault process, the
+    resilience runtime's realizations (gap, per-server psi ages) — the
+    result's legacy ``gaps``/``staleness`` fields are stacked views over
+    these rows, and the same rows feed the ``round`` telemetry stream."""
+    with trace_span("population_compile", faulted=process is not None):
+        if process is not None:
+            step = gfl.make_gfl_step(process, grad_fn, cfg)
+        else:
+            step = gfl.make_gfl_step(jnp.asarray(A), grad_fn, cfg)
+        sample = jax.jit(
+            lambda k: uniform_cohort_batch(k, pop, L, batch_size))
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
     state = gfl.init_state(k_init, pop.P, pop.dim)
-    sample = jax.jit(lambda k: uniform_cohort_batch(k, pop, L, batch_size))
-    msd = []
-    gaps = [] if process is not None else None
-    ages = [] if process is not None else None
+    log = RunLog("population")
     for i in range(iters):
         key, kb = jax.random.split(key)
         state = step(state, sample(kb))
+        gap = age = None
         if process is not None:
-            gaps.append(process.realize(i).gap)   # memoized with the step's
-            ages.append(np.asarray(state.psi_age))  # own realization
+            gap = process.realize(i).gap          # memoized with the step's
+            age = np.asarray(state.psi_age)       # own realization
+        msd = None
         if i % record_every == 0:
             wc = gfl.centroid(state.params)
-            msd.append(float(jnp.sum((wc - w_ref_j) ** 2)))
-    gaps = None if gaps is None else np.asarray(gaps)
-    ages = None if ages is None else np.stack(ages)
-    return msd, state.params, gaps, ages
+            msd = float(jnp.sum((wc - w_ref_j) ** 2))
+        log.row(i, msd=msd, gap=gap, staleness=age,
+                q=L / pop.num_clients, cohort=L)
+    return log, state.params
 
 
 def _run_pure_scan(pop, cfg, A, grad_fn, L, batch_size, iters, seed,
@@ -427,10 +444,16 @@ def _run_pure_scan(pop, cfg, A, grad_fn, L, batch_size, iters, seed,
                                    step=state.step)
         new_state = gfl.GFLState(new_params, state.step + 1, key)
         msd = jnp.sum((gfl.centroid(new_params) - w_ref_j) ** 2)
+        # in-graph tap: a no-op (identical program) when telemetry is off,
+        # an ordered io_callback flush per round when a session is active —
+        # the scan stays fused either way
+        emit("step", {"step": new_state.step, "msd": msd})
         return (loop_key, new_state), msd
 
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
     state = gfl.init_state(k_init, pop.P, pop.dim)
-    (_, state), msd = jax.lax.scan(body, (key, state), None, length=iters)
+    with trace_span("population_scan", iters=iters):
+        (_, state), msd = jax.lax.scan(body, (key, state), None,
+                                       length=iters)
     return np.asarray(msd), state.params

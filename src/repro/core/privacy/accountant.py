@@ -187,6 +187,9 @@ class PrivacyAccountant:
     distribution: str = "laplace"
     sampling_rate: float = 1.0     # default per-round cohort rate q = L/K
     q_history: list = field(default_factory=list)  # realized q per release
+    owner: str = ""                # ledger tag in telemetry records ("" =
+                                   # the scalar ledger; AsyncAccountant tags
+                                   # its per-server ledgers "server<p>")
 
     def __post_init__(self):
         if self.curve not in _CURVES:
@@ -220,6 +223,18 @@ class PrivacyAccountant:
         self.step += steps
         eps = self.epsilon()
         self.history.append((self.step, eps))
+        from repro.telemetry import emit, telemetry_active
+        if telemetry_active():
+            q_rel = self.q_history[-1] if self.q_history \
+                else self.sampling_rate
+            eps_rel = self.per_release_epsilon(self.step)
+            emit("privacy", {
+                "step": self.step, "eps": eps, "eps_release": eps_rel,
+                "eps_release_amp": (
+                    amplified_release_epsilon(eps_rel, q_rel)
+                    if 0.0 < q_rel <= 1.0 else eps_rel),
+                "delta": self.delta_spent(), "q": q_rel,
+                "curve": self.curve, "server": self.owner})
         return eps
 
     def epsilon(self) -> float:
@@ -341,8 +356,11 @@ class AsyncAccountant:
                      ) -> "AsyncAccountant":
         """One ledger per server, each configured like
         :meth:`PrivacyAccountant.from_profile`."""
-        return cls([PrivacyAccountant.from_profile(profile, mu, grad_bound)
-                    for _ in range(P)])
+        ledgers = [PrivacyAccountant.from_profile(profile, mu, grad_bound)
+                   for _ in range(P)]
+        for p, acc in enumerate(ledgers):
+            acc.owner = f"server{p}"
+        return cls(ledgers)
 
     @property
     def P(self) -> int:

@@ -45,6 +45,20 @@ _BLOCK_CANDIDATES = (128, 256, 512, 1024)
 _AUTOTUNE_CACHE: dict = {}
 
 
+def _emit_kernel(**values) -> None:
+    """Host-side dispatch record onto the ``kernel`` telemetry stream.
+
+    Runs at TRACE time (dispatch decisions are host logic), so nothing is
+    ever inserted into the kernels' process-lifetime jit caches — a
+    record fires once per newly-traced (op, shape), only while a
+    telemetry session is active."""
+    from repro.telemetry import current_session, emit
+    sess = current_session()
+    if sess is None:
+        return
+    emit("kernel", {"seq": sess.next_seq(), **values})
+
+
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
@@ -124,26 +138,33 @@ def choose_block(op: str, d: int, *, shape_key: tuple = (),
     the kernel on dummy data), each candidate is timed once — warmup call
     then one measured call — and the winner is cached per
     ``(op, d_pad, interpret, *shape_key)`` for the process lifetime."""
+    from repro.telemetry import trace_span
     cands, d_pad = block_candidates(d)
     key = (op, d_pad, interpret) + tuple(shape_key)
     if key in _AUTOTUNE_CACHE:
         return _AUTOTUNE_CACHE[key], d_pad
+    autotuned = False
     if (len(cands) == 1 or make_timed is None
             or os.environ.get("REPRO_KERNEL_AUTOTUNE", "1") == "0"):
         block = cands[-1]
     else:
+        autotuned = True
         best = (float("inf"), cands[-1])
-        for c in cands:
-            try:
-                fn = make_timed(c, d_pad)
-                jax.block_until_ready(fn())          # compile + warmup
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn())
-                best = min(best, (time.perf_counter() - t0, c))
-            except Exception:                        # candidate infeasible
-                continue
+        with trace_span(f"autotune:{op}", d_pad=d_pad,
+                        candidates=len(cands)):
+            for c in cands:
+                try:
+                    fn = make_timed(c, d_pad)
+                    jax.block_until_ready(fn())      # compile + warmup
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn())
+                    best = min(best, (time.perf_counter() - t0, c))
+                except Exception:                    # candidate infeasible
+                    continue
         block = best[1]
     _AUTOTUNE_CACHE[key] = block
+    _emit_kernel(op=op, backend="pallas", block_d=block, d_pad=d_pad,
+                 interpret=int(interpret), autotuned=int(autotuned))
     return block, d_pad
 
 
@@ -177,6 +198,20 @@ def round_fold(w: jax.Array, grads: jax.Array, *, mu: float, bound: float,
     """
     backend, interpret = _resolve(backend, interpret)
     P, L, D = grads.shape
+    from repro.telemetry import telemetry_active
+    if telemetry_active():
+        # shapes are concrete at trace time: record the round's analytic
+        # HBM traffic (launch/roofline.py) once per newly-traced shape
+        from repro.launch.roofline import round_pipeline_traffic
+        itemsize = jnp.dtype(grads.dtype).itemsize
+        fused_t = round_pipeline_traffic(P, L, D, itemsize=itemsize,
+                                         mode=mode, fused=True)
+        ref_t = round_pipeline_traffic(P, L, D, itemsize=itemsize,
+                                       mode=mode, fused=False)
+        _emit_kernel(op="round_fold.traffic", backend=backend, mode=mode,
+                     hbm_bytes=float(fused_t["total"]),
+                     hbm_bytes_ref=float(ref_t["total"]),
+                     pld_passes=int(fused_t["pld_passes"]))
     ones = jnp.ones((P, L), jnp.float32)
     pre_w = ones if pre_w is None else pre_w.astype(jnp.float32)
     fold_w = ones if fold_w is None else fold_w.astype(jnp.float32)

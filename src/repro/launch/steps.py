@@ -331,9 +331,11 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
     argument — one compilation serves every round's cohort."""
     from repro.core.resilience import parse_fault_spec
     from repro.core.resilience.runtime import ensure_dropout_safe
+    from repro.telemetry import telemetry_active, trace_span
 
     cfg = model.cfg
-    A = make_combination_matrix(mesh, gfl)
+    with trace_span("make_combination_matrix", combine=gfl.combine_impl):
+        A = make_combination_matrix(mesh, gfl)
     Pn = num_servers(mesh)
     Aj = jnp.asarray(A, jnp.float32)
 
@@ -543,6 +545,22 @@ def make_train_step(model: Model, gfl: GFLConfig, mesh,
                 new_params = combine(psi, A_rt)
 
         metrics = {"loss": loss.mean(), "step": state.step}
+        # read-only telemetry tap: the norm reductions are only traced in
+        # when a session is active at build time — the step closure is
+        # rebuilt per make_train_step call, so the off path compiles the
+        # exact program it does today.  No io_callback here (callback
+        # operands would fight SPMD sharding propagation on real meshes);
+        # the launcher emits these host-side from the metrics dict.
+        if telemetry_active():
+            sq_upd = sq_par = jnp.zeros((), jnp.float32)
+            for n, o in zip(jax.tree_util.tree_leaves(new_params),
+                            jax.tree_util.tree_leaves(state.params)):
+                d = n.astype(jnp.float32) - o.astype(jnp.float32)
+                sq_upd = sq_upd + jnp.sum(d * d)
+                sq_par = sq_par + jnp.sum(
+                    n.astype(jnp.float32) * n.astype(jnp.float32))
+            metrics["update_norm"] = jnp.sqrt(sq_upd)
+            metrics["param_norm"] = jnp.sqrt(sq_par)
         return TrainState(new_params, state.step + 1, key), metrics
 
     return step_fn

@@ -76,6 +76,14 @@ def main(argv=None):
                          "layer (docs/kernels.md): the dense combine runs "
                          "the fused graph-combine per leaf (interpret mode "
                          "on CPU)")
+    ap.add_argument("--telemetry", default="off",
+                    help="telemetry sink spec (docs/observability.md): "
+                         "'off' (default, bit-identical), or a '+'-joined "
+                         "jsonl[:path]|csv[:base]|memory|console[:every] "
+                         "spec — per-step mesh metrics, the privacy "
+                         "ledger stream and a Chrome trace JSON land in "
+                         "the sinks (inspect with python -m "
+                         "repro.telemetry.inspect)")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args(argv)
 
@@ -97,7 +105,8 @@ def main(argv=None):
                         sigma_g=args.sigma, mu=args.mu, grad_bound=10.0,
                         combine_impl=args.combine, fault=args.fault,
                         cohort=args.cohort, async_spec=args.async_spec,
-                        use_kernels=args.use_kernels)
+                        use_kernels=args.use_kernels,
+                        telemetry=args.telemetry)
     # mechanism-aware: the noise profile picks the curve (eps is inf for
     # a zero-noise config — the honest Theorem-2 answer)
     acc = mechanism_for(gfl_cfg).accountant()
@@ -151,9 +160,13 @@ def main(argv=None):
 
     process = (steps_lib.make_topology_process(mesh, gfl_cfg)
                if gfl_cfg.fault != "none" else None)
-    with mesh:
-        step = jax.jit(steps_lib.make_train_step(model, gfl_cfg, mesh))
-        state = steps_lib.init_train_state(model, gfl_cfg, mesh, rng_key())
+    from repro.telemetry import (emit, session_from_config,
+                                 telemetry_active, trace_span)
+    with session_from_config(gfl_cfg), mesh:
+        with trace_span("train_setup", arch=cfg.name, servers=Pn):
+            step = jax.jit(steps_lib.make_train_step(model, gfl_cfg, mesh))
+            state = steps_lib.init_train_state(model, gfl_cfg, mesh,
+                                               rng_key())
         t0 = time.time()
         # cohort selection stream stays decoupled from the model-init seed
         sel_key = rng_key(1234)
@@ -191,6 +204,17 @@ def main(argv=None):
                 eps = async_acc.epsilon()
             else:
                 eps = acc.advance(1, q=q_round)
+            if telemetry_active():   # the loss sync is on-path only
+                rec = {"step": i, "loss": float(metrics["loss"]),
+                       "seconds": time.time() - t0}
+                if process is not None:
+                    rec["gap"] = process.realize(i).gap
+                emit("mesh", rec)
+                if "update_norm" in metrics:
+                    emit("step", {
+                        "step": i + 1,
+                        "update_norm": float(metrics["update_norm"]),
+                        "param_norm": float(metrics["param_norm"])})
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
                 amp = (f" eps_amp {acc.amplified_epsilon():.2f} "
                        f"(q~{scheduler.realized_q:.3g})"

@@ -1,0 +1,37 @@
+"""Unified telemetry: schema'd metric streams, span tracing, run logs.
+
+Public surface:
+
+* :func:`emit` / :class:`MetricsStream` — record emission from host code
+  and from inside jitted/scanned engine bodies (io_callback flush).
+* :func:`session` / :func:`session_from_config` — open the process-wide
+  telemetry session; ``telemetry=off`` (the default) is bit-identical to
+  an uninstrumented run.
+* :func:`trace_span` — Chrome/Perfetto span tracing of host-side phases.
+* :class:`RunLog` — per-round record list engines expose their legacy
+  result fields as views over.
+* :class:`Schema` registry — every stream's fields, validated at emit.
+* :class:`QuantileSketch` — mergeable quantile summaries (inspector).
+
+``python -m repro.telemetry.inspect RUN.jsonl`` summarizes a run.
+"""
+from repro.telemetry.runlog import RunLog
+from repro.telemetry.schema import (Field, Schema, SchemaError, get_schema,
+                                    list_schemas, register_schema,
+                                    validate_record)
+from repro.telemetry.sinks import (ConsoleSink, CsvSink, JsonlSink,
+                                   MemorySink, Sink, sink_from_spec)
+from repro.telemetry.sketch import QuantileSketch
+from repro.telemetry.stream import (MetricsStream, TelemetrySession,
+                                    current_session, emit, session,
+                                    session_from_config, telemetry_active)
+from repro.telemetry.trace import SpanTracer, trace_span
+
+__all__ = [
+    "ConsoleSink", "CsvSink", "Field", "JsonlSink", "MemorySink",
+    "MetricsStream", "QuantileSketch", "RunLog", "Schema", "SchemaError",
+    "Sink", "SpanTracer", "TelemetrySession", "current_session", "emit",
+    "get_schema", "list_schemas", "register_schema", "session",
+    "session_from_config", "sink_from_spec", "telemetry_active",
+    "trace_span", "validate_record",
+]

@@ -1,0 +1,260 @@
+"""Telemetry session + the in-graph metrics tap.
+
+One process-wide :class:`TelemetrySession` (opened by an engine from
+``GFLConfig.telemetry``, by ``launch/train.py --telemetry``, or
+explicitly via :func:`session`) owns the sinks and the span tracer.
+:func:`emit` is THE emission primitive everywhere:
+
+* host-side values -> ingested directly (validation + envelope + sinks);
+* traced values (inside jit / ``lax.scan`` bodies) -> flushed through
+  ``jax.experimental.io_callback``, so the instrumented program stays
+  fused and the tap is read-only (no RNG consumption, no change to any
+  engine value — regression-tested in tests/test_telemetry.py).
+
+Hard contract: with no session active, :func:`emit` returns before
+touching jax — the traced program is IDENTICAL to the uninstrumented
+one (``telemetry=off`` is bit-identical by construction).  Because the
+on/off decision is taken at trace time, modules with process-lifetime
+``@jax.jit`` caches (the kernel layer) must not call :func:`emit` on
+traced values — they emit host-side at dispatch time instead
+(:mod:`repro.kernels.ops`); gflint GFL006 enforces that raw
+``io_callback`` use routes through this module.
+"""
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager, nullcontext
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from repro.telemetry.schema import validate_record
+from repro.telemetry.sinks import MemorySink, Sink, sink_from_spec
+from repro.telemetry.trace import SpanTracer
+
+ENV_FLAG = "REPRO_TELEMETRY"
+_OFF = ("", "off", "none", "0")
+
+_SESSION: Optional["TelemetrySession"] = None
+
+
+class TelemetrySession:
+    """Owns the sinks + tracer of one telemetry-enabled run scope."""
+
+    def __init__(self, sinks: List[Sink], tracer: Optional[SpanTracer] = None,
+                 run_id: Optional[str] = None):
+        self.sinks = list(sinks)
+        self.tracer = tracer
+        self.run_id = run_id or f"run-{os.getpid()}-{int(time.time())}"
+        self.records = 0
+        self._seq = 0
+
+    def next_seq(self) -> int:
+        """Monotone per-session sequence number (the ``kernel`` stream's
+        index — dispatch events have no natural round)."""
+        self._seq += 1
+        return self._seq
+
+    def ingest(self, stream: str, record: Mapping) -> None:
+        rec = {"stream": stream, "run": self.run_id,
+               "t_wall": time.time(), **record}
+        for sink in self.sinks:
+            sink.write(rec)
+        self.records += 1
+
+    def memory_records(self, stream: Optional[str] = None) -> List[dict]:
+        """Records captured by any MemorySink (tests / tail views)."""
+        out: List[dict] = []
+        for sink in self.sinks:
+            if isinstance(sink, MemorySink):
+                out.extend(sink.records if stream is None
+                           else sink.by_stream(stream))
+        return out
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            sink.close()
+        if self.tracer is not None:
+            self.tracer.save()
+
+
+def current_session() -> Optional[TelemetrySession]:
+    return _SESSION
+
+
+def telemetry_active() -> bool:
+    return _SESSION is not None
+
+
+def _is_traced(value) -> bool:
+    import jax
+    return isinstance(value, jax.core.Tracer)
+
+
+def _to_py(value):
+    """numpy/jax host value -> plain python for the record envelope."""
+    if hasattr(value, "ndim") and getattr(value, "ndim", 0) > 0:
+        return [_to_py(v) for v in value.tolist()] \
+            if hasattr(value, "tolist") else list(value)
+    if hasattr(value, "item"):
+        value = value.item()
+    if isinstance(value, bool):
+        return int(value)
+    return value
+
+
+def emit(stream: str, values: Mapping, *, ordered: bool = True) -> None:
+    """Emit one record to the active session (no-op when none).
+
+    Works from host code and from inside traced bodies: traced values are
+    flushed via ``jax.experimental.io_callback`` (``ordered=True`` keeps
+    the JSONL record order deterministic inside ``lax.scan``).  Keys are
+    validated against the stream's registered schema at the call site —
+    trace time for in-graph taps.
+    """
+    sess = _SESSION
+    if sess is None:
+        return
+    vals = dict(values)
+    validate_record(stream, vals)
+    if not any(_is_traced(v) for v in vals.values()):
+        sess.ingest(stream, {k: _to_py(v) for k, v in vals.items()})
+        return
+
+    import jax.numpy as jnp
+    from jax.experimental import io_callback
+
+    keys = tuple(sorted(vals))
+
+    def _flush(*arrays):
+        live = _SESSION            # looked up at RUN time: a program traced
+        if live is None:           # under a session stays safe after close
+            return
+        live.ingest(stream, {k: _to_py(a) for k, a in zip(keys, arrays)})
+
+    io_callback(_flush, None, *[jnp.asarray(vals[k]) for k in keys],
+                ordered=ordered)
+
+
+class MetricsStream:
+    """In-graph metric accumulator for scanned whole-run executors.
+
+    The carry is a tiny f32 pytree threaded alongside the engine state
+    (so the scan stays fused); :meth:`tap` folds the round's values into
+    the declared cumulative fields and flushes one schema'd record per
+    round via :func:`emit`'s ``io_callback`` path.
+
+    Engines construct one only when telemetry is active — the off-path
+    scan carries exactly the uninstrumented state pytree::
+
+        ms = MetricsStream("step", cumulative={"events_total": "events"})
+        carry0 = (key, state) + ((ms.init(),) if ms else ())
+        # inside the body:
+        acc = ms.tap(acc, {"step": i, "events": n_valid, ...})
+
+    ``cumulative`` maps running-total field -> the per-tap source field
+    it sums (a bare tuple of names sums each field into itself).
+    """
+
+    def __init__(self, stream: str,
+                 cumulative: Mapping[str, str] | Tuple[str, ...] = ()):
+        from repro.telemetry.schema import get_schema
+        self.stream = stream
+        if not isinstance(cumulative, Mapping):
+            cumulative = {name: name for name in cumulative}
+        self.cumulative = dict(cumulative)
+        allowed = get_schema(stream).field_map()
+        for total in self.cumulative:
+            if total not in allowed:
+                raise KeyError(f"cumulative field {total!r} not in stream "
+                               f"{stream!r} schema")
+
+    def init(self) -> Dict[str, object]:
+        import jax.numpy as jnp
+        return {f: jnp.zeros((), jnp.float32) for f in self.cumulative}
+
+    def tap(self, carry: Dict, values: Mapping, *, flush: bool = True,
+            ordered: bool = True) -> Dict:
+        """Fold ``values`` into the running totals and (by default) flush
+        one record combining the instantaneous values with the totals.
+        Returns the new carry."""
+        import jax.numpy as jnp
+        vals = dict(values)
+        new_carry = dict(carry)
+        for total, source in self.cumulative.items():
+            if source in vals:
+                new_carry[total] = (carry[total]
+                                    + jnp.asarray(vals[source], jnp.float32))
+        if flush:
+            emit(self.stream, {**vals, **new_carry}, ordered=ordered)
+        return new_carry
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _trace_path_for(sinks: List[Sink]):
+    """Default trace-JSON path: beside the first file-backed sink, else
+    under the default telemetry dir."""
+    from pathlib import Path
+
+    from repro.telemetry.sinks import CsvSink, JsonlSink
+    for sink in sinks:
+        if isinstance(sink, JsonlSink):
+            return sink.path.with_suffix(".trace.json")
+        if isinstance(sink, CsvSink):
+            return sink.base.with_suffix(".trace.json")
+    return Path(os.environ.get("REPRO_TELEMETRY_DIR",
+                               "telemetry_out")) / "run.trace.json"
+
+
+@contextmanager
+def session(spec_or_sinks="memory", *, trace_path=None,
+            run_id: Optional[str] = None):
+    """Open a telemetry session for a ``with`` scope.
+
+    ``spec_or_sinks``: a ``+``-separated sink spec string
+    (``"jsonl:runs/a.jsonl+console"``) or an explicit list of
+    :class:`~repro.telemetry.sinks.Sink` objects.  Nesting is a no-op
+    passthrough: an inner engine-opened session never shadows an outer
+    CLI-opened one, so records from nested executors land in one stream.
+    """
+    global _SESSION
+    if _SESSION is not None:           # outer session wins; reuse it
+        yield _SESSION
+        return
+    if isinstance(spec_or_sinks, str):
+        sinks = [sink_from_spec(part)
+                 for part in spec_or_sinks.split("+") if part]
+    else:
+        sinks = list(spec_or_sinks)
+    tracer = SpanTracer(trace_path if trace_path is not None
+                        else _trace_path_for(sinks))
+    sess = TelemetrySession(sinks, tracer, run_id)
+    _SESSION = sess
+    try:
+        yield sess
+    finally:
+        _SESSION = None
+        sess.close()
+
+
+def config_spec(cfg=None) -> str:
+    """The effective telemetry spec of a run: the config field when set,
+    else the ``REPRO_TELEMETRY`` env override, else ``"off"``."""
+    spec = getattr(cfg, "telemetry", "off") if cfg is not None else "off"
+    if spec in _OFF:
+        spec = os.environ.get(ENV_FLAG, "off")
+    return spec or "off"
+
+
+def session_from_config(cfg=None):
+    """Context manager for an engine run: opens a session per
+    ``cfg.telemetry`` / ``REPRO_TELEMETRY`` — or a passthrough
+    nullcontext when telemetry is off or an outer session is already
+    active (the bit-identity off path)."""
+    spec = config_spec(cfg)
+    if spec in _OFF or _SESSION is not None:
+        return nullcontext(_SESSION)
+    return session(spec)

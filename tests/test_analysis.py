@@ -307,6 +307,74 @@ def test_gfl005_fires_on_registered_but_untested_grammar(tmp_path):
     assert any(f.rule == "GFL005" and "widget" in f.message
                and "round-trip" in f.message for f in findings), findings
 
+# --------------------------------------------------------------- GFL006
+def test_gfl006_fires_on_raw_io_callback_in_jit(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+        from jax.experimental import io_callback
+
+        @jax.jit
+        def f(x):
+            io_callback(print, None, x)
+            return x
+    """)
+    assert any(f.rule == "GFL006" and "io_callback" in f.message
+               for f in findings), findings
+
+def test_gfl006_fires_on_debug_callback_in_scan_body(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def body(carry, x):
+            jax.debug.callback(print, x)
+            return carry + x, x
+
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+    """)
+    assert any(f.rule == "GFL006" and "jax.debug.callback" in f.message
+               for f in findings), findings
+
+def test_gfl006_quiet_on_telemetry_emit_and_untraced(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+        from repro.telemetry import emit
+
+        @jax.jit
+        def f(x):
+            emit("step", {"step": 0, "msd": x})
+            return x
+
+        def host_only(x):
+            from jax.experimental import io_callback
+            io_callback(print, None, x)
+    """)
+    assert "GFL006" not in rules_fired(findings), findings
+
+def test_gfl006_telemetry_package_exempt(tmp_path):
+    findings = lint(tmp_path / "pkg", """
+        import jax
+        from jax.experimental import io_callback
+
+        @jax.jit
+        def flush(x):
+            io_callback(print, None, x)
+            return x
+    """, filename="repro/telemetry/stream.py")
+    assert "GFL006" not in rules_fired(findings), findings
+
+def test_gfl006_pragma_suppresses(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+        from jax.experimental import io_callback
+
+        @jax.jit
+        def f(x):
+            io_callback(print, None, x)  # gflint: disable=GFL006
+            return x
+    """)
+    assert "GFL006" not in rules_fired(findings), findings
+
 # ---------------------------------------------------------- baseline/CLI
 def test_baseline_roundtrip_and_diff(tmp_path):
     findings = lint(tmp_path, """
