@@ -1,0 +1,192 @@
+"""Benchmark regression gate: current BENCH payloads vs history.
+
+    python benchmarks/compare.py                 # gate the repo-root payloads
+    python benchmarks/compare.py --base-tol 0.4  # looser timing tolerance
+
+For every repo-root ``BENCH_*.json`` that declares headline metrics
+(written via ``benchmarks/meta.write_bench``), find the most recent
+``BENCH_history.jsonl`` entry for the *same benchmark on the same
+backend* that is not the current run, and compare each shared headline
+metric against it:
+
+* direction ``higher`` regresses when ``cur < prev - slack``;
+* direction ``lower``  regresses when ``cur > prev + slack``;
+
+where ``slack = max(tol * |prev|, abs_tol)``.  The relative tolerance
+is noise-aware: a headline declaration may pin its own ``tol``
+(deterministic metrics — byte ratios, live-memory budgets — declare a
+tight one), otherwise it defaults to ``base_tol / sqrt(repeats)`` using
+the ``repeats`` count already in the payload (best-of-N timings
+concentrate as N grows).  ``abs_tol`` (default 0) keeps near-zero
+metrics such as overhead percentages from tripping on relative noise.
+No matching history entry means "first datapoint" — a pass with a
+note, never a failure.
+
+Exit 0 when nothing regressed, 1 on any regression (the CI nightly gate),
+2 on usage errors.  Pure stdlib — safe to run anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_HISTORY = REPO_ROOT / "BENCH_history.jsonl"
+DEFAULT_BASE_TOL = 0.25
+
+
+def load_history(path: Path) -> List[dict]:
+    entries: List[dict] = []
+    if not path.exists():
+        return entries
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return entries
+
+
+def find_baseline(history: List[dict], payload: dict) -> Optional[dict]:
+    """Latest same-benchmark same-backend history entry that is not the
+    current run (keyed by (git_sha, timestamp)) and carries headlines."""
+    meta = payload.get("meta", {})
+    name = payload.get("benchmark") or payload.get("bench")
+    cur_key = (meta.get("git_sha"), meta.get("timestamp"))
+    for entry in reversed(history):
+        if entry.get("benchmark") != name:
+            continue
+        if entry.get("backend") != meta.get("backend"):
+            continue
+        if (entry.get("git_sha"), entry.get("timestamp")) == cur_key:
+            continue
+        if entry.get("headline"):
+            return entry
+    return None
+
+
+def metric_tolerance(decl: dict, payload: dict, base_tol: float) -> float:
+    if decl.get("tol") is not None:
+        return float(decl["tol"])
+    repeats = payload.get("repeats") or 1
+    try:
+        repeats = max(1, int(repeats))
+    except (TypeError, ValueError):
+        repeats = 1
+    return base_tol / math.sqrt(repeats)
+
+
+def compare_payload(payload: dict, history: List[dict],
+                    base_tol: float) -> List[dict]:
+    """Rows for one payload: one dict per headline metric with prev/cur/
+    tol and a ``status`` of ok | REGRESSION | no-baseline | new-metric."""
+    headline = payload.get("headline") or {}
+    name = payload.get("benchmark") or payload.get("bench") or "?"
+    baseline = find_baseline(history, payload)
+    rows = []
+    for metric, decl in sorted(headline.items()):
+        cur = float(decl["value"])
+        row = {"benchmark": name, "metric": metric,
+               "direction": decl["direction"], "cur": cur,
+               "prev": None, "delta_pct": None, "tol_pct": None,
+               "status": "no-baseline"}
+        if baseline is not None:
+            prev_decl = (baseline.get("headline") or {}).get(metric)
+            if prev_decl is None:
+                row["status"] = "new-metric"
+            else:
+                prev = float(prev_decl["value"])
+                tol = metric_tolerance(decl, payload, base_tol)
+                abs_tol = float(decl.get("abs_tol") or 0.0)
+                row["prev"] = prev
+                row["tol_pct"] = 100.0 * tol
+                if not math.isfinite(prev) or not math.isfinite(cur) \
+                        or (prev == 0.0 and abs_tol == 0.0):
+                    row["status"] = "skipped (non-comparable baseline)"
+                else:
+                    if prev != 0.0:
+                        row["delta_pct"] = 100.0 * (cur - prev) / abs(prev)
+                    slack = max(tol * abs(prev), abs_tol)
+                    if decl["direction"] == "higher":
+                        bad = cur < prev - slack
+                    else:
+                        bad = cur > prev + slack
+                    row["status"] = "REGRESSION" if bad else "ok"
+        rows.append(row)
+    return rows
+
+
+def _fmt(v, width=12) -> str:
+    if v is None:
+        return f"{'-':>{width}}"
+    return f"{v:>{width}.6g}"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/compare.py",
+        description="Diff current BENCH payload headlines against the "
+                    "last same-backend BENCH_history.jsonl entries.")
+    ap.add_argument("--root", type=Path, default=REPO_ROOT,
+                    help="directory holding the BENCH_*.json payloads")
+    ap.add_argument("--history", type=Path, default=None,
+                    help="history JSONL (default: <root>/BENCH_history"
+                         ".jsonl)")
+    ap.add_argument("--base-tol", type=float, default=DEFAULT_BASE_TOL,
+                    help="base relative tolerance before the 1/sqrt("
+                         "repeats) noise scaling (default 0.25)")
+    args = ap.parse_args(argv)
+
+    history_path = args.history or args.root / "BENCH_history.jsonl"
+    history = load_history(history_path)
+    payload_files = [f for f in sorted(args.root.glob("BENCH_*.json"))
+                     if f.name != "BENCH_index.json"]
+    if not payload_files:
+        print(f"error: no BENCH_*.json under {args.root}", file=sys.stderr)
+        return 2
+
+    all_rows: List[dict] = []
+    undeclared = []
+    for f in payload_files:
+        try:
+            payload = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: unreadable payload {f}: {e}", file=sys.stderr)
+            return 2
+        if not payload.get("headline"):
+            undeclared.append(f.name)
+            continue
+        all_rows.extend(compare_payload(payload, history, args.base_tol))
+
+    header = (f"{'benchmark':<22} {'metric':<26} {'prev':>12} {'cur':>12} "
+              f"{'delta%':>8} {'tol%':>6}  status")
+    print(header)
+    print("-" * len(header))
+    for r in all_rows:
+        delta = "-" if r["delta_pct"] is None else f"{r['delta_pct']:+.1f}"
+        tol = "-" if r["tol_pct"] is None else f"{r['tol_pct']:.1f}"
+        print(f"{r['benchmark']:<22} {r['metric']:<26} {_fmt(r['prev'])} "
+              f"{_fmt(r['cur'])} {delta:>8} {tol:>6}  {r['status']}")
+    if undeclared:
+        print(f"(no headline declared: {', '.join(undeclared)})")
+
+    regressions = [r for r in all_rows if r["status"] == "REGRESSION"]
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) vs {history_path}",
+              file=sys.stderr)
+        return 1
+    print(f"\nno regressions ({len(all_rows)} metric(s) checked vs "
+          f"{history_path})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.topology import combination_matrix
 from repro.kernels import ops, ref
-from repro.launch.roofline import round_pipeline_traffic
+from repro.launch.roofline import HBM_BW, round_pipeline_traffic
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
@@ -55,7 +55,7 @@ def _time(fn, *args, iters=5):
 def micro_rows(quick: bool = False):
     P, D, L = 16, 8192 if not quick else 2048, 8
     A = jnp.asarray(combination_matrix("ring", P), jnp.float32)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(0)  # fixed bench seed: reproducible trajectory  # gflint: disable=GFL001
     psi = jax.random.normal(key, (P, D))
     g = jax.random.normal(jax.random.fold_in(key, 1), (P, D))
     upd = jax.random.normal(jax.random.fold_in(key, 2), (L, D))
@@ -99,7 +99,7 @@ def _unfused_chain(A, mode, L, D):
     scale = jax.jit(lambda n, b: jnp.minimum(1.0, b / jnp.maximum(n, 1e-12)))
     update = jax.jit(lambda w, g, c, mu: w[:, None] - mu * c[..., None] * g)
     mask = jax.jit(lambda u, ks: u + jax.vmap(
-        lambda k: pairwise_masks_vec(k, L, D, 0.3))(ks))
+        lambda k: pairwise_masks_vec(k, L, D, 0.3))(ks))  # bench-only release site (timing, no data)  # gflint: disable=GFL002
     lap = jax.jit(lambda u, ks: u + jax.vmap(
         lambda k: sample_laplace(k, (L, D), 0.3))(ks))
     fold = jax.jit(lambda u: u.mean(axis=1))
@@ -137,7 +137,7 @@ def _fused(A, mode, backend, L, D):
         elif mode == "laplace":
             noise = jax.vmap(lambda k: sample_laplace(k, (L, D), sigma)
                              )(keys)
-        psi, _ = ops.round_fold(
+        psi, _ = ops.round_fold(  # bench-only release site (timing, no data)  # gflint: disable=GFL002
             w, grads, mu=0.1, bound=10.0, mode=mode, sigma=sigma,
             seeds=seeds, noise=noise, backend=backend)
         return ops.graph_combine(A, psi, gn, backend=backend)
@@ -147,7 +147,7 @@ def _fused(A, mode, backend, L, D):
 
 def round_rows(quick: bool = False):
     P, L, D = (10, 8, 16384 if not quick else 2048)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(0)  # fixed bench seed: reproducible trajectory  # gflint: disable=GFL001
     A = jnp.asarray(combination_matrix("ring", P), jnp.float32)
     w = jax.random.normal(key, (P, D))
     grads = jax.random.normal(jax.random.fold_in(key, 1), (P, L, D))
@@ -169,6 +169,14 @@ def round_rows(quick: bool = False):
         # [P, D]-order terms in the byte ratio vanish as D grows)
         trips = fus_b["pld_passes"] / ref_b["pld_passes"]
         speedup = t_chain / t_ref
+        # achieved bandwidth: the mode's analytic HBM traffic over the
+        # measured wall time, as a fraction of single-chip peak HBM_BW.
+        # On CPU these are diagnostics (the fraction reads against a TPU
+        # roof), but they make the perf trajectory roofline-anchored.
+        ach_ref_gbps = fus_b["total"] / (t_ref * 1e-6) / 1e9
+        ach_pal_gbps = fus_b["total"] / (t_pal * 1e-6) / 1e9
+        frac_ref = ach_ref_gbps / (HBM_BW / 1e9)
+        frac_pal = ach_pal_gbps / (HBM_BW / 1e9)
         rows += [
             (f"round/{mode}/unfused_chain_us", t_chain),
             (f"round/{mode}/fused_ref_us", t_ref),
@@ -176,6 +184,10 @@ def round_rows(quick: bool = False):
             (f"round/{mode}/hbm_ratio", ratio),
             (f"round/{mode}/roundtrip_ratio", trips),
             (f"round/{mode}/speedup", speedup),
+            (f"round/{mode}/achieved_gbps_ref", ach_ref_gbps),
+            (f"round/{mode}/achieved_gbps_pallas", ach_pal_gbps),
+            (f"round/{mode}/roofline_frac_ref", frac_ref),
+            (f"round/{mode}/roofline_frac_pallas", frac_pal),
         ]
         report.append({
             "name": "round_pipeline", "mode": mode, "P": P, "L": L, "D": D,
@@ -188,6 +200,11 @@ def round_rows(quick: bool = False):
             "ref_hbm_terms": ref_b, "fused_hbm_terms": fus_b,
             "unfused_chain_us": t_chain, "fused_ref_us": t_ref,
             "fused_pallas_us": t_pal, "round_speedup": speedup,
+            "achieved_gbps_ref": ach_ref_gbps,
+            "achieved_gbps_pallas": ach_pal_gbps,
+            "roofline_frac_ref": frac_ref,
+            "roofline_frac_pallas": frac_pal,
+            "roof_gbps": HBM_BW / 1e9,
         })
     return rows, report
 
@@ -216,8 +233,16 @@ def _write_json(report, reduced: bool):
                  "round-trip accounting from launch/roofline.py"),
         "rows": report,
     }
+    # headline: per-mode analytic byte ratio (deterministic -> tight tol)
+    # and measured chain-vs-fused speedup (CPU timing -> generous tol)
+    headline = {}
+    for r in report:
+        headline[f"{r['mode']}_hbm_ratio"] = ("lower", r["hbm_ratio"], 0.01)
+        headline[f"{r['mode']}_speedup"] = ("higher", r["round_speedup"],
+                                            0.5)
     from benchmarks.meta import write_bench
-    return write_bench(REPO_ROOT / "BENCH_kernels.json", payload)
+    return write_bench(REPO_ROOT / "BENCH_kernels.json", payload,
+                       headline=headline)
 
 
 def main(argv=None):

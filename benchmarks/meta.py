@@ -1,12 +1,23 @@
 """Shared benchmark provenance: one metadata block for every BENCH_*.json.
 
 Every benchmark that persists a repo-root ``BENCH_<name>.json`` routes its
-payload through :func:`write_bench`, which stamps a common ``meta`` block
-(host, backend, jax/jaxlib versions, git sha, timestamp) so perf
-trajectories across commits stay attributable to the machine and revision
-that produced them.  :func:`write_index` scans the repo root and rebuilds
-``BENCH_index.json`` — the one-stop catalog the CI artifacts and the docs
-link to.
+payload through :func:`write_bench` (gflint GFL007 enforces the routing),
+which stamps a common ``meta`` block (host, backend, jax/jaxlib versions,
+git sha, timestamp) so perf trajectories across commits stay attributable
+to the machine and revision that produced them.
+
+Benchmarks additionally declare their **headline metrics** — name,
+value, direction (``higher``/``lower`` is better) and optionally a
+per-metric relative tolerance — and every :func:`write_bench` call
+appends one compact record (headline + provenance) to the append-only
+``BENCH_history.jsonl``, keyed by ``(benchmark, git_sha, timestamp)``.
+``benchmarks/compare.py`` diffs the current payloads against the last
+same-backend history entry and gates CI on regressions;
+``python -m repro.telemetry.inspect bench`` renders the trends.
+
+:func:`write_index` scans the repo root and rebuilds ``BENCH_index.json``
+— the one-stop catalog (now carrying each benchmark's headline values,
+so the index doubles as a one-file perf snapshot).
 """
 from __future__ import annotations
 
@@ -16,8 +27,12 @@ import subprocess
 import sys
 import time
 from pathlib import Path
+from typing import Mapping, Optional
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
+HISTORY = REPO_ROOT / "BENCH_history.jsonl"
+
+_DIRECTIONS = ("higher", "lower")
 
 
 def _git_sha() -> str:
@@ -48,12 +63,69 @@ def bench_metadata() -> dict:
     }
 
 
-def write_bench(path, payload: dict) -> Path:
-    """Write one BENCH_*.json with the shared ``meta`` block attached."""
+def normalize_headline(headline: Optional[Mapping]) -> dict:
+    """Headline declarations -> the canonical stored form.
+
+    Accepts ``{name: (direction, value[, rel_tol])}`` tuples or already-
+    canonical ``{name: {"value": v, "direction": d[, "tol": t]
+    [, "abs_tol": a]}}`` dicts (``abs_tol`` is an absolute slack for
+    metrics that live near zero, where relative tolerances degenerate).
+    """
+    out = {}
+    for name, decl in (headline or {}).items():
+        if isinstance(decl, Mapping):
+            entry = {"value": float(decl["value"]),
+                     "direction": str(decl["direction"])}
+            if decl.get("tol") is not None:
+                entry["tol"] = float(decl["tol"])
+            if decl.get("abs_tol") is not None:
+                entry["abs_tol"] = float(decl["abs_tol"])
+        else:
+            direction, value, *tol = decl
+            entry = {"value": float(value), "direction": str(direction)}
+            if tol:
+                entry["tol"] = float(tol[0])
+        if entry["direction"] not in _DIRECTIONS:
+            raise ValueError(
+                f"headline metric {name!r}: direction must be one of "
+                f"{_DIRECTIONS}, got {entry['direction']!r}")
+        out[name] = entry
+    return out
+
+
+def write_bench(path, payload: dict, *, headline: Optional[Mapping] = None,
+                history: Optional[Path] = None) -> Path:
+    """Write one BENCH_*.json with the shared ``meta`` block attached and
+    append the compact headline+provenance record to BENCH_history.jsonl.
+
+    ``headline`` maps metric name -> ``(direction, value[, rel_tol])``
+    (direction ``"higher"``/``"lower"`` = which way is better; the
+    optional relative tolerance overrides compare.py's noise-derived
+    default for deterministic metrics).
+    """
     path = Path(path)
     payload = dict(payload)
     payload.setdefault("meta", bench_metadata())
+    if headline is not None:
+        payload["headline"] = normalize_headline(headline)
     path.write_text(json.dumps(payload, indent=2) + "\n")
+
+    meta = payload["meta"]
+    record = {
+        "benchmark": (payload.get("benchmark") or payload.get("bench")
+                      or path.stem),
+        "file": path.name,
+        "git_sha": meta.get("git_sha"),
+        "timestamp": meta.get("timestamp"),
+        "backend": meta.get("backend"),
+        "host": meta.get("host"),
+        "reduced": payload.get("reduced"),
+        "repeats": payload.get("repeats"),
+        "headline": payload.get("headline", {}),
+    }
+    history = Path(history) if history is not None else HISTORY
+    with open(history, "a", encoding="utf-8") as fh:
+        fh.write(json.dumps(record) + "\n")
     return path
 
 
@@ -77,6 +149,10 @@ def write_index(root=REPO_ROOT) -> Path:
             "git_sha": meta.get("git_sha"),
             "timestamp": meta.get("timestamp"),
             "backend": meta.get("backend"),
+            # declared headline metric values: the index doubles as a
+            # one-file perf snapshot
+            "headline": {name: decl.get("value")
+                         for name, decl in doc.get("headline", {}).items()},
         })
     out = root / "BENCH_index.json"
     out.write_text(json.dumps({"benchmarks": entries,

@@ -1,4 +1,11 @@
-"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV)."""
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV).
+
+Also reconciles the *measured* side of the roofline: when the repo-root
+``BENCH_kernels.json`` (written by ``benchmarks/kernel_bench.py``)
+carries achieved-GB/s / roofline-fraction columns, ``run()`` emits one
+``roofline/kernel_*`` row per pipeline mode so the analytic table and
+the measured kernel trajectory land in the same report.
+"""
 from __future__ import annotations
 
 import csv
@@ -9,6 +16,8 @@ import os
 HERE = os.path.dirname(__file__)
 RESULTS = os.path.join(HERE, "dryrun_results")
 OUT = os.path.join(HERE, "results")
+REPO_ROOT = os.path.dirname(HERE)
+KERNELS_JSON = os.path.join(REPO_ROOT, "BENCH_kernels.json")
 
 COLS = ["arch", "shape", "mesh", "combine", "kind", "chips",
         "compute_s", "memory_s", "collective_s", "bottleneck",
@@ -50,7 +59,31 @@ def run(quick: bool = False):
     out = [("roofline/num_compiled", len(ok)),
            ("roofline/num_skipped", len(skips))]
     out += [(f"roofline/bottleneck_{k}", v) for k, v in sorted(bottl.items())]
+    out += kernel_rows()
     return out
+
+
+def kernel_rows(path: str = KERNELS_JSON):
+    """Measured-kernel reconciliation rows from BENCH_kernels.json (empty
+    when the kernel bench has not run or predates the roofline columns)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    rows = []
+    for r in doc.get("rows", []):
+        mode = r.get("mode")
+        if mode is None or "achieved_gbps_pallas" not in r:
+            continue
+        rows += [
+            (f"roofline/kernel_{mode}_achieved_gbps",
+             r["achieved_gbps_pallas"]),
+            (f"roofline/kernel_{mode}_roofline_frac",
+             r["roofline_frac_pallas"]),
+            (f"roofline/kernel_{mode}_hbm_ratio", r["hbm_ratio"]),
+        ]
+    return rows
 
 
 def markdown_table(mesh="16x16", combine=None) -> str:

@@ -5,16 +5,19 @@ The observability contract (docs/observability.md) is two-sided:
 regression test owns that half), and ``telemetry=on`` must stay cheap
 enough to leave enabled on real runs.  This bench measures the second
 half: the same population-engine scan run — the executor with the
-densest in-graph tap (an ordered ``io_callback`` flush per round) —
-timed with telemetry off and with a memory sink attached.  Best-of-N
-wall clock per arm, compile excluded via a warmup run.
+densest in-graph tap — timed with telemetry off, with the default
+per-round ordered ``io_callback`` flush (``flush_every=1``), and with
+the buffered flush (``REPRO_TELEMETRY_FLUSH_EVERY=8`` — one callback
+per 8 rounds).  Best-of-N wall clock per arm, compile excluded via a
+warmup run.
 
 Writes the repo-root ``BENCH_telemetry.json`` and prints ``name,value``
-rows; the measured overhead_pct is the number docs/observability.md
+rows; the measured overhead_pct numbers are what docs/observability.md
 quotes (acceptance: < 15% on the CPU smoke).
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -28,6 +31,7 @@ from repro.core.population import (
 )
 
 OUT = REPO_ROOT / "BENCH_telemetry.json"
+BUFFERED_FLUSH_EVERY = 8
 
 
 def _time_arm(pop, cfg, *, iters, batch_size, w_ref, repeats):
@@ -64,7 +68,19 @@ def run(quick: bool = False):
     on_s = _time_arm(pop, GFLConfig(**base, telemetry="memory"),
                      iters=iters, batch_size=batch_size, w_ref=w_ref,
                      repeats=repeats)
+    prev_env = os.environ.get("REPRO_TELEMETRY_FLUSH_EVERY")
+    os.environ["REPRO_TELEMETRY_FLUSH_EVERY"] = str(BUFFERED_FLUSH_EVERY)
+    try:
+        buf_s = _time_arm(pop, GFLConfig(**base, telemetry="memory"),
+                          iters=iters, batch_size=batch_size, w_ref=w_ref,
+                          repeats=repeats)
+    finally:
+        if prev_env is None:
+            del os.environ["REPRO_TELEMETRY_FLUSH_EVERY"]
+        else:
+            os.environ["REPRO_TELEMETRY_FLUSH_EVERY"] = prev_env
     overhead_pct = 100.0 * (on_s - off_s) / off_s
+    overhead_buf_pct = 100.0 * (buf_s - off_s) / off_s
 
     write_bench(OUT, {
         "benchmark": "telemetry_overhead",
@@ -72,16 +88,33 @@ def run(quick: bool = False):
         "P": P, "K": K, "L": L, "N": N, "iters": iters,
         "repeats": repeats, "batch_size": batch_size,
         "off_seconds": off_s, "on_seconds": on_s,
+        "buffered_seconds": buf_s,
         "overhead_pct": overhead_pct,
+        "overhead_buffered_pct": overhead_buf_pct,
+        "flush_every_buffered": BUFFERED_FLUSH_EVERY,
         "sink": "memory",
-        "note": ("population scan executor; the on arm carries the "
-                 "MetricsStream pytree and flushes one ordered "
-                 "io_callback per round into a memory sink"),
+        "note": ("population scan executor; the on arm flushes one "
+                 "ordered io_callback per round into a memory sink, the "
+                 "buffered arm batches 8 rounds per callback "
+                 "(REPRO_TELEMETRY_FLUSH_EVERY)"),
+    }, headline={
+        # overhead is a small difference of two noisy timings that can
+        # sit near (or even below) zero on a loaded host, so an absolute
+        # slack in percentage points is the only stable gate — wide
+        # enough to absorb timer noise either side of zero, tight enough
+        # to catch a catastrophic (>20-point) regression (the hard
+        # < 15% acceptance lives in docs/observability.md)
+        "overhead_pct": {"value": overhead_pct, "direction": "lower",
+                         "abs_tol": 20.0},
+        "overhead_buffered_pct": {"value": overhead_buf_pct,
+                                  "direction": "lower", "abs_tol": 20.0},
     })
 
     return [("telemetry_overhead/off_s", off_s),
             ("telemetry_overhead/on_s", on_s),
-            ("telemetry_overhead/overhead_pct", overhead_pct)]
+            ("telemetry_overhead/buffered_s", buf_s),
+            ("telemetry_overhead/overhead_pct", overhead_pct),
+            ("telemetry_overhead/overhead_buffered_pct", overhead_buf_pct)]
 
 
 if __name__ == "__main__":

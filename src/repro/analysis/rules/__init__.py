@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from repro.analysis.rules.accounting import AccountantCoverageRule
+from repro.analysis.rules.bench import BenchWriteRoutingRule
 from repro.analysis.rules.callbacks import CallbackRoutingRule
 from repro.analysis.rules.keys import KeyHygieneRule
 from repro.analysis.rules.parity import BackendParityRule
@@ -9,7 +10,8 @@ from repro.analysis.rules.specs import SpecRoundTripRule
 from repro.analysis.rules.tracing import TraceSafetyRule
 
 ALL_RULES = (KeyHygieneRule, AccountantCoverageRule, TraceSafetyRule,
-             BackendParityRule, SpecRoundTripRule, CallbackRoutingRule)
+             BackendParityRule, SpecRoundTripRule, CallbackRoutingRule,
+             BenchWriteRoutingRule)
 
 
 def default_rules():

@@ -447,8 +447,12 @@ def _run_async_impl(source, cfg: GFLConfig, *, ticks: int,
 
         # in-graph metrics: a MetricsStream pytree rides the scan carry
         # ONLY when a telemetry session is active — the off-path carry is
-        # exactly the uninstrumented (key, state) structure
-        ms = (MetricsStream("step", cumulative={"events_total": "events"})
+        # exactly the uninstrumented (key, state) structure; at
+        # flush_every > 1 (REPRO_TELEMETRY_FLUSH_EVERY) rows buffer N
+        # ticks per ordered io_callback flush
+        ms = (MetricsStream("step", cumulative={"events_total": "events"},
+                            fields=("step", "msd", "flushed", "events",
+                                    "events_total", "dropped", "staleness"))
               if telemetry_active() else None)
 
         def body(carry, x):
@@ -472,6 +476,9 @@ def _run_async_impl(source, cfg: GFLConfig, *, ticks: int,
         with trace_span("async_scan", ticks=ticks):
             final, outs = jax.lax.scan(body, carry0, xs)
         state = final[1]
+        if ms is not None:
+            jax.effects_barrier()   # in-scan flushes land before the tail
+            ms.drain(final[2] if len(final) > 2 else None)
         msd, flushed, q, stale, events, dropped = (np.asarray(o)
                                                    for o in outs)
     else:

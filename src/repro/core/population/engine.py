@@ -54,7 +54,7 @@ from repro.core.population.population import (
 from repro.core.privacy.mechanism import RoundContext, mechanism_for
 from repro.core.resilience.process import TopologyProcess
 from repro.sanitize import ReleaseLedger, sanitize_enabled, sanitizer_scope
-from repro.telemetry import (RunLog, emit, session_from_config,
+from repro.telemetry import (MetricsStream, RunLog, session_from_config,
                              telemetry_active, trace_span)
 from repro.core.simulate import (
     _solve_global,
@@ -434,8 +434,15 @@ def _run_pure_scan(pop, cfg, A, grad_fn, L, batch_size, iters, seed,
     mech = mechanism_for(cfg)
     Aj = jnp.asarray(A)
 
+    # in-graph tap: constructed ONLY when a session is active, so the
+    # off-path carry/program is exactly the uninstrumented one; at
+    # flush_every > 1 (REPRO_TELEMETRY_FLUSH_EVERY) rows buffer N rounds
+    # per ordered io_callback flush — the scan stays fused either way
+    ms = (MetricsStream("step", fields=("step", "msd"))
+          if telemetry_active() else None)
+
     def body(carry, _):
-        loop_key, state = carry
+        loop_key, state = carry[0], carry[1]
         loop_key, kb = jax.random.split(loop_key)
         batch = uniform_cohort_batch(kb, pop, L, batch_size)
         key, sub = jax.random.split(state.key)
@@ -444,16 +451,19 @@ def _run_pure_scan(pop, cfg, A, grad_fn, L, batch_size, iters, seed,
                                    step=state.step)
         new_state = gfl.GFLState(new_params, state.step + 1, key)
         msd = jnp.sum((gfl.centroid(new_params) - w_ref_j) ** 2)
-        # in-graph tap: a no-op (identical program) when telemetry is off,
-        # an ordered io_callback flush per round when a session is active —
-        # the scan stays fused either way
-        emit("step", {"step": new_state.step, "msd": msd})
-        return (loop_key, new_state), msd
+        if ms is None:
+            return (loop_key, new_state), msd
+        acc = ms.tap(carry[2], {"step": new_state.step, "msd": msd})
+        return (loop_key, new_state, acc), msd
 
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
     state = gfl.init_state(k_init, pop.P, pop.dim)
+    carry0 = ((key, state) if ms is None else (key, state, ms.init()))
     with trace_span("population_scan", iters=iters):
-        (_, state), msd = jax.lax.scan(body, (key, state), None,
-                                       length=iters)
+        final, msd = jax.lax.scan(body, carry0, None, length=iters)
+    state = final[1]
+    if ms is not None:
+        jax.effects_barrier()       # in-scan flushes land before the tail
+        ms.drain(final[2] if len(final) > 2 else None)
     return np.asarray(msd), state.params

@@ -27,6 +27,7 @@ from repro.core.population.cohort import (cohort_to_spec,
 from repro.core.population.population import (parse_population_spec,
                                               population_to_spec)
 from repro.core.resilience.faults import parse_fault_spec
+from repro.telemetry.watch import parse_watch_spec, watch_to_spec
 
 
 class SpecGrammar(NamedTuple):
@@ -98,3 +99,11 @@ register_grammar(
     lambda a: "none" if a is None else a.to_spec(),
     examples=("none", "async:buffer=8,latency=lognorm:0.5,max_stale=4",
               "async:buffer=4,latency=fixed:2,alpha=0.5"))
+
+# live-monitor alert rules (telemetry/watch.py): eps-budget exhaustion,
+# spectral-gap collapse, NaN trajectories, exploding norms, staleness,
+# throughput drop vs trailing window
+register_grammar(
+    "watch", parse_watch_spec, watch_to_spec,
+    examples=("nan", "eps:0.9,target=4", "gap:0.05+nan+norm:100",
+              "stale:4+throughput:0.5,window=20"))

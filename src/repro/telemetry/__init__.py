@@ -15,6 +15,7 @@ Public surface:
 
 ``python -m repro.telemetry.inspect RUN.jsonl`` summarizes a run.
 """
+from repro.telemetry.profile import profile_phase
 from repro.telemetry.runlog import RunLog
 from repro.telemetry.schema import (Field, Schema, SchemaError, get_schema,
                                     list_schemas, register_schema,
@@ -23,15 +24,18 @@ from repro.telemetry.sinks import (ConsoleSink, CsvSink, JsonlSink,
                                    MemorySink, Sink, sink_from_spec)
 from repro.telemetry.sketch import QuantileSketch
 from repro.telemetry.stream import (MetricsStream, TelemetrySession,
-                                    current_session, emit, session,
+                                    current_session, emit,
+                                    flush_every_from_env, session,
                                     session_from_config, telemetry_active)
 from repro.telemetry.trace import SpanTracer, trace_span
+from repro.telemetry.watch import WatchRule, Watcher, parse_watch_spec
 
 __all__ = [
     "ConsoleSink", "CsvSink", "Field", "JsonlSink", "MemorySink",
     "MetricsStream", "QuantileSketch", "RunLog", "Schema", "SchemaError",
-    "Sink", "SpanTracer", "TelemetrySession", "current_session", "emit",
-    "get_schema", "list_schemas", "register_schema", "session",
-    "session_from_config", "sink_from_spec", "telemetry_active",
+    "Sink", "SpanTracer", "TelemetrySession", "WatchRule", "Watcher",
+    "current_session", "emit", "flush_every_from_env", "get_schema",
+    "list_schemas", "parse_watch_spec", "profile_phase", "register_schema",
+    "session", "session_from_config", "sink_from_spec", "telemetry_active",
     "trace_span", "validate_record",
 ]

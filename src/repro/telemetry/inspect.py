@@ -3,6 +3,7 @@
     python -m repro.telemetry.inspect RUN.jsonl
     python -m repro.telemetry.inspect RUN.jsonl --stream round --tail 5
     python -m repro.telemetry.inspect RUN.jsonl --trace RUN.trace.json
+    python -m repro.telemetry.inspect bench [BENCH_history.jsonl]
 
 Reads the canonical JSONL sink output, re-validates every record against
 the schema registry, and prints per-metric summaries (count / min / p50 /
@@ -11,6 +12,11 @@ the eps-vs-round table from the ``privacy`` stream, and a spectral-gap
 sparkline from the ``round`` stream.  Exit code 0 when every record
 parses and validates, 1 otherwise — CI uses that as the artifact
 sanity gate.
+
+The ``bench`` subcommand renders per-metric trend tables + sparklines
+from the append-only ``BENCH_history.jsonl`` that
+``benchmarks/meta.write_bench`` maintains (see ``benchmarks/compare.py``
+for the gating half).
 """
 from __future__ import annotations
 
@@ -166,7 +172,106 @@ def check_trace(path: Path) -> List[str]:
     return errs
 
 
+# ---------------------------------------------------------------------------
+# `inspect bench`: per-metric trends from BENCH_history.jsonl
+# ---------------------------------------------------------------------------
+
+
+def load_history(path: Path) -> List[dict]:
+    entries: List[dict] = []
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return entries
+
+
+# not a dispatched kernel op: `backend` here is a history-entry filter,
+# not a backend= dispatch switch  # gflint: disable=GFL004
+def bench_trends(entries: List[dict], *, benchmark: Optional[str] = None,
+                 backend: Optional[str] = None, last: int = 30
+                 ) -> Dict[Tuple[str, str], dict]:
+    """(benchmark, metric) -> trend dict with the value series (history
+    order), direction, and the identifying shas/backends."""
+    trends: Dict[Tuple[str, str], dict] = {}
+    for e in entries:
+        name = e.get("benchmark", "?")
+        if benchmark and name != benchmark:
+            continue
+        if backend and e.get("backend") != backend:
+            continue
+        for metric, decl in (e.get("headline") or {}).items():
+            v = decl.get("value")
+            if not _is_number(v):
+                continue
+            t = trends.setdefault((name, metric), {
+                "values": [], "shas": [],
+                "direction": decl.get("direction", "?"),
+                "backend": e.get("backend")})
+            t["values"].append(float(v))
+            t["shas"].append((e.get("git_sha") or "unknown")[:9])
+    for t in trends.values():
+        t["values"] = t["values"][-last:]
+        t["shas"] = t["shas"][-last:]
+    return trends
+
+
+def bench_table(trends: Dict[Tuple[str, str], dict]) -> str:
+    lines = [f"{'benchmark':<22} {'metric':<26} {'dir':<6} {'n':>3} "
+             f"{'first':>11} {'last':>11} {'delta%':>8}  trend"]
+    lines.append("-" * len(lines[0]))
+    for (name, metric), t in sorted(trends.items()):
+        vals = t["values"]
+        first, lastv = vals[0], vals[-1]
+        delta = ("-" if first == 0 or not math.isfinite(first)
+                 else f"{100.0 * (lastv - first) / abs(first):+.1f}")
+        lines.append(
+            f"{name:<22} {metric:<26} {t['direction']:<6} {len(vals):>3} "
+            f"{_fmt(first):>11} {_fmt(lastv):>11} {delta:>8}  "
+            f"{sparkline(vals, width=24)}")
+    return "\n".join(lines)
+
+
+def bench_main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.telemetry.inspect bench",
+        description="Render per-metric benchmark trends from "
+                    "BENCH_history.jsonl.")
+    ap.add_argument("history", type=Path, nargs="?",
+                    default=Path("BENCH_history.jsonl"),
+                    help="history JSONL (benchmarks/meta.write_bench "
+                         "appends it)")
+    ap.add_argument("--benchmark", default=None,
+                    help="restrict to one benchmark")
+    ap.add_argument("--backend", default=None,
+                    help="restrict to one backend (cpu/tpu/gpu)")
+    ap.add_argument("--last", type=int, default=30, metavar="N",
+                    help="plot the last N history points (default 30)")
+    args = ap.parse_args(argv)
+
+    if not args.history.exists():
+        print(f"error: {args.history} does not exist", file=sys.stderr)
+        return 1
+    entries = load_history(args.history)
+    trends = bench_trends(entries, benchmark=args.benchmark,
+                          backend=args.backend, last=args.last)
+    print(f"{args.history}: {len(entries)} history entries, "
+          f"{len(trends)} metric trend(s)")
+    if trends:
+        print()
+        print(bench_table(trends))
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "bench":
+        return bench_main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="python -m repro.telemetry.inspect",
         description="Summarize a telemetry run's JSONL record stream.")

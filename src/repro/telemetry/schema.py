@@ -187,3 +187,26 @@ register_schema(Schema(
         Field("seconds", "scalar", "wall-clock seconds since t0"),
         Field("gap", "scalar", "realized spectral gap (fault runs)"),
     )))
+
+register_schema(Schema(
+    "profile", index="seq", description=(
+        "phase-level profiler record (telemetry/profile.py): wall time "
+        "attributed to compile vs execute vs host callbacks per "
+        "trace_span phase, jit retrace/recompile counters, device "
+        "memory watermark"),
+    fields=(
+        Field("seq", "int", "profiler sequence number (session-monotone)"),
+        Field("phase", "str", "trace_span phase name"),
+        Field("wall_s", "scalar", "phase wall-clock seconds"),
+        Field("compile_s", "scalar", "jaxpr trace + lowering + backend "
+                                     "compile seconds inside the phase"),
+        Field("execute_s", "scalar", "wall minus compile minus callback "
+                                     "(device execute + host driver)"),
+        Field("callback_s", "scalar", "host seconds inside telemetry "
+                                      "io_callback flushes"),
+        Field("retraces", "int", "jaxpr traces started inside the phase"),
+        Field("compiles", "int", "XLA backend compiles inside the phase"),
+        Field("peak_bytes", "scalar", "device peak_bytes_in_use after the "
+                                      "phase (absent when the backend has "
+                                      "no memory_stats)"),
+    )))

@@ -32,6 +32,8 @@ from repro.telemetry.sinks import MemorySink, Sink, sink_from_spec
 from repro.telemetry.trace import SpanTracer
 
 ENV_FLAG = "REPRO_TELEMETRY"
+ENV_FLUSH_EVERY = "REPRO_TELEMETRY_FLUSH_EVERY"
+ENV_PROFILE = "REPRO_TELEMETRY_PROFILE"
 _OFF = ("", "off", "none", "0")
 
 _SESSION: Optional["TelemetrySession"] = None
@@ -41,12 +43,20 @@ class TelemetrySession:
     """Owns the sinks + tracer of one telemetry-enabled run scope."""
 
     def __init__(self, sinks: List[Sink], tracer: Optional[SpanTracer] = None,
-                 run_id: Optional[str] = None):
+                 run_id: Optional[str] = None,
+                 profile: Optional[bool] = None):
         self.sinks = list(sinks)
         self.tracer = tracer
         self.run_id = run_id or f"run-{os.getpid()}-{int(time.time())}"
         self.records = 0
         self._seq = 0
+        # host seconds spent inside telemetry io_callback flushes — the
+        # phase profiler subtracts this from phase wall time
+        self.callback_seconds = 0.0
+        if profile is None:
+            profile = os.environ.get(ENV_PROFILE, "0") \
+                not in ("", "0", "false")
+        self.profile = bool(profile)
 
     def next_seq(self) -> int:
         """Monotone per-session sequence number (the ``kernel`` stream's
@@ -129,10 +139,21 @@ def emit(stream: str, values: Mapping, *, ordered: bool = True) -> None:
         live = _SESSION            # looked up at RUN time: a program traced
         if live is None:           # under a session stays safe after close
             return
+        t0 = time.perf_counter()
         live.ingest(stream, {k: _to_py(a) for k, a in zip(keys, arrays)})
+        live.callback_seconds += time.perf_counter() - t0
 
     io_callback(_flush, None, *[jnp.asarray(vals[k]) for k in keys],
                 ordered=ordered)
+
+
+def flush_every_from_env(default: int = 1) -> int:
+    """The ``REPRO_TELEMETRY_FLUSH_EVERY`` buffering knob (>= 1)."""
+    try:
+        n = int(os.environ.get(ENV_FLUSH_EVERY, "") or default)
+    except ValueError:
+        n = default
+    return max(1, n)
 
 
 class MetricsStream:
@@ -140,8 +161,8 @@ class MetricsStream:
 
     The carry is a tiny f32 pytree threaded alongside the engine state
     (so the scan stays fused); :meth:`tap` folds the round's values into
-    the declared cumulative fields and flushes one schema'd record per
-    round via :func:`emit`'s ``io_callback`` path.
+    the declared cumulative fields and flushes schema'd records via
+    :func:`emit`'s ``io_callback`` path.
 
     Engines construct one only when telemetry is active — the off-path
     scan carries exactly the uninstrumented state pytree::
@@ -150,27 +171,75 @@ class MetricsStream:
         carry0 = (key, state) + ((ms.init(),) if ms else ())
         # inside the body:
         acc = ms.tap(acc, {"step": i, "events": n_valid, ...})
+        # after the scan (buffered mode only; no-op at flush_every=1):
+        ms.drain(final_carry[2])
 
     ``cumulative`` maps running-total field -> the per-tap source field
     it sums (a bare tuple of names sums each field into itself).
+
+    ``flush_every`` buffers N rows per ordered ``io_callback`` flush
+    (default 1 — one callback per row, the exact pre-buffering program;
+    the env knob ``REPRO_TELEMETRY_FLUSH_EVERY`` overrides the default).
+    Buffered mode needs the full per-row field set declared up front
+    (``fields``; scalar/int kinds only — buffer dtypes derive from the
+    schema), rides ``[N]``-shaped ring buffers in the carry, flushes
+    inside a ``lax.cond`` when the buffer fills, and :meth:`drain`
+    emits the partial tail after the scan.
     """
 
     def __init__(self, stream: str,
-                 cumulative: Mapping[str, str] | Tuple[str, ...] = ()):
+                 cumulative: Mapping[str, str] | Tuple[str, ...] = (),
+                 *, fields: Tuple[str, ...] = (),
+                 flush_every: Optional[int] = None):
         from repro.telemetry.schema import get_schema
         self.stream = stream
         if not isinstance(cumulative, Mapping):
             cumulative = {name: name for name in cumulative}
         self.cumulative = dict(cumulative)
-        allowed = get_schema(stream).field_map()
+        schema = get_schema(stream)
+        allowed = schema.field_map()
         for total in self.cumulative:
             if total not in allowed:
                 raise KeyError(f"cumulative field {total!r} not in stream "
                                f"{stream!r} schema")
+        if flush_every is None:
+            flush_every = flush_every_from_env()
+        self.flush_every = max(1, int(flush_every))
+        self.fields = tuple(fields)
+        if self.flush_every > 1:
+            if not self.fields:
+                raise ValueError(
+                    "flush_every > 1 needs the per-row field set declared "
+                    "up front (fields=...) so buffer dtypes are known")
+            kinds = {}
+            for name in self.fields:
+                if name not in allowed:
+                    raise KeyError(f"field {name!r} not in stream "
+                                   f"{stream!r} schema")
+                if allowed[name].kind not in ("scalar", "int"):
+                    raise ValueError(
+                        f"buffered field {name!r} has kind "
+                        f"{allowed[name].kind!r}; only scalar/int rows "
+                        f"can ride the flush buffer")
+                kinds[name] = allowed[name].kind
+            self._kinds = kinds
+
+    # -- carry construction --------------------------------------------
 
     def init(self) -> Dict[str, object]:
         import jax.numpy as jnp
-        return {f: jnp.zeros((), jnp.float32) for f in self.cumulative}
+        totals = {f: jnp.zeros((), jnp.float32) for f in self.cumulative}
+        if self.flush_every == 1:
+            return totals
+        n = self.flush_every
+        buf = {name: jnp.zeros(
+                   (n,), jnp.int32 if self._kinds[name] == "int"
+                   else jnp.float32)
+               for name in self.fields}
+        return {"totals": totals, "buf": buf,
+                "pos": jnp.zeros((), jnp.int32)}
+
+    # -- per-row tap ----------------------------------------------------
 
     def tap(self, carry: Dict, values: Mapping, *, flush: bool = True,
             ordered: bool = True) -> Dict:
@@ -179,14 +248,74 @@ class MetricsStream:
         Returns the new carry."""
         import jax.numpy as jnp
         vals = dict(values)
-        new_carry = dict(carry)
+        totals = carry["totals"] if self.flush_every > 1 else carry
+        new_totals = dict(totals)
         for total, source in self.cumulative.items():
             if source in vals:
-                new_carry[total] = (carry[total]
-                                    + jnp.asarray(vals[source], jnp.float32))
-        if flush:
-            emit(self.stream, {**vals, **new_carry}, ordered=ordered)
-        return new_carry
+                new_totals[total] = (totals[total]
+                                     + jnp.asarray(vals[source],
+                                                   jnp.float32))
+        row = {**vals, **new_totals}
+        if self.flush_every == 1:
+            if flush:
+                emit(self.stream, row, ordered=ordered)
+            return new_totals
+        return self._tap_buffered(carry, row, new_totals, ordered=ordered)
+
+    def _tap_buffered(self, carry, row, new_totals, *, ordered) -> Dict:
+        import jax.numpy as jnp
+        from jax import lax
+        from jax.experimental import io_callback
+        from repro.telemetry.schema import validate_record
+
+        validate_record(self.stream, row)
+        if set(row) != set(self.fields):
+            raise ValueError(
+                f"buffered tap row fields {sorted(row)} != declared "
+                f"fields {sorted(self.fields)} — the buffer layout is "
+                f"fixed at construction")
+        pos = carry["pos"]
+        buf = {name: carry["buf"][name].at[pos].set(
+                   jnp.asarray(row[name]).astype(carry["buf"][name].dtype))
+               for name in self.fields}
+        filled = pos + 1
+
+        def _flush(count):
+            io_callback(self._flush_rows, None,
+                        *[buf[name] for name in self.fields], count,
+                        ordered=ordered)
+            return jnp.zeros((), jnp.int32)
+
+        new_pos = lax.cond(filled >= self.flush_every, _flush,
+                           lambda count: filled.astype(jnp.int32), filled)
+        return {"totals": new_totals, "buf": buf, "pos": new_pos}
+
+    def _flush_rows(self, *arrays) -> None:
+        """Host side of the buffered flush: re-emit ``count`` buffered
+        rows in order (looked up at RUN time, like :func:`emit`)."""
+        live = _SESSION
+        if live is None:
+            return
+        t0 = time.perf_counter()
+        *cols, count = arrays
+        for i in range(int(count)):
+            live.ingest(self.stream,
+                        {name: _to_py(col[i])
+                         for name, col in zip(self.fields, cols)})
+        live.callback_seconds += time.perf_counter() - t0
+
+    # -- post-scan tail -------------------------------------------------
+
+    def drain(self, carry: Optional[Dict]) -> None:
+        """Emit the partial buffer tail after the scan (host side).  A
+        no-op at ``flush_every=1`` (nothing is ever buffered) and with
+        no active session."""
+        if carry is None or self.flush_every == 1 or _SESSION is None:
+            return
+        import numpy as np
+        self._flush_rows(*[np.asarray(carry["buf"][name])
+                           for name in self.fields],
+                         np.asarray(carry["pos"]))
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +340,8 @@ def _trace_path_for(sinks: List[Sink]):
 
 @contextmanager
 def session(spec_or_sinks="memory", *, trace_path=None,
-            run_id: Optional[str] = None):
+            run_id: Optional[str] = None,
+            profile: Optional[bool] = None):
     """Open a telemetry session for a ``with`` scope.
 
     ``spec_or_sinks``: a ``+``-separated sink spec string
@@ -231,7 +361,7 @@ def session(spec_or_sinks="memory", *, trace_path=None,
         sinks = list(spec_or_sinks)
     tracer = SpanTracer(trace_path if trace_path is not None
                         else _trace_path_for(sinks))
-    sess = TelemetrySession(sinks, tracer, run_id)
+    sess = TelemetrySession(sinks, tracer, run_id, profile=profile)
     _SESSION = sess
     try:
         yield sess

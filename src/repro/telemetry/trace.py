@@ -103,9 +103,19 @@ def _null_span():
 
 def trace_span(name: str, **args):
     """Span against the active session's tracer (no-op when telemetry is
-    off).  Usage: ``with trace_span("round_fold", P=P, D=D): ...``"""
+    off).  Usage: ``with trace_span("round_fold", P=P, D=D): ...``
+
+    Profiling sessions (``session(profile=True)`` /
+    ``REPRO_TELEMETRY_PROFILE=1``) additionally attribute every span's
+    wall time to compile/execute/callback via the ``profile`` stream
+    (:mod:`repro.telemetry.profile`)."""
     from repro.telemetry.stream import current_session
     sess = current_session()
-    if sess is None or sess.tracer is None:
+    if sess is None:
+        return _null_span()
+    if sess.profile:
+        from repro.telemetry.profile import profile_phase
+        return profile_phase(name, **args)
+    if sess.tracer is None:
         return _null_span()
     return sess.tracer.span(name, **args)

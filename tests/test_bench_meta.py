@@ -1,0 +1,198 @@
+"""Benchmark provenance + regression-gate tests.
+
+write_bench appends the compact headline record to BENCH_history.jsonl;
+compare.py exits 1 on a seeded regression and 0 on in-tolerance runs;
+``python -m repro.telemetry.inspect bench`` renders trends from the
+history.  All exercised on synthetic payloads under tmp_path — the real
+repo-root payloads are never touched.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from benchmarks.compare import (
+    compare_payload,
+    find_baseline,
+    load_history,
+    main as compare_main,
+)
+from benchmarks.meta import normalize_headline, write_bench
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _payload(value, *, sha="abc", ts="2026-08-09T00:00:00+0000",
+             name="toy_bench", tol=None, direction="higher", abs_tol=None):
+    decl = {"value": value, "direction": direction}
+    if tol is not None:
+        decl["tol"] = tol
+    if abs_tol is not None:
+        decl["abs_tol"] = abs_tol
+    return {
+        "benchmark": name, "reduced": True, "repeats": 4,
+        "meta": {"git_sha": sha, "timestamp": ts, "backend": "cpu",
+                 "host": "h"},
+        "headline": normalize_headline({"speed": decl}),
+    }
+
+
+# ----------------------------------------------------------- write_bench
+
+def test_write_bench_appends_history(tmp_path):
+    out = tmp_path / "BENCH_toy.json"
+    hist = tmp_path / "BENCH_history.jsonl"
+    for i in range(2):
+        write_bench(out, {"benchmark": "toy_bench", "reduced": True,
+                          "repeats": 3},
+                    headline={"speed": ("higher", 100.0 + i)},
+                    history=hist)
+    doc = json.loads(out.read_text())
+    assert doc["headline"]["speed"] == {"value": 101.0,
+                                        "direction": "higher"}
+    assert "meta" in doc and doc["meta"]["git_sha"]
+    records = [json.loads(ln) for ln in hist.read_text().splitlines()]
+    assert len(records) == 2          # append-only: one record per write
+    assert [r["headline"]["speed"]["value"] for r in records] \
+        == [100.0, 101.0]
+    assert records[0]["benchmark"] == "toy_bench"
+    assert records[0]["git_sha"] == doc["meta"]["git_sha"]
+    assert records[0]["repeats"] == 3
+
+
+def test_normalize_headline_forms_and_validation():
+    out = normalize_headline({"a": ("lower", 2, 0.1),
+                              "b": {"value": 3, "direction": "higher",
+                                    "abs_tol": 5}})
+    assert out["a"] == {"value": 2.0, "direction": "lower", "tol": 0.1}
+    assert out["b"] == {"value": 3.0, "direction": "higher", "abs_tol": 5.0}
+    with pytest.raises(ValueError):
+        normalize_headline({"x": ("sideways", 1.0)})
+
+
+# ------------------------------------------------------------- compare
+
+def test_find_baseline_skips_current_run_and_other_backends():
+    history = [
+        {"benchmark": "toy_bench", "backend": "tpu", "git_sha": "old",
+         "timestamp": "t0", "headline": {"speed": {"value": 1.0,
+                                                   "direction": "higher"}}},
+        {"benchmark": "toy_bench", "backend": "cpu", "git_sha": "old",
+         "timestamp": "t1", "headline": {"speed": {"value": 90.0,
+                                                   "direction": "higher"}}},
+        {"benchmark": "toy_bench", "backend": "cpu", "git_sha": "abc",
+         "timestamp": "2026-08-09T00:00:00+0000",
+         "headline": {"speed": {"value": 50.0, "direction": "higher"}}},
+    ]
+    base = find_baseline(history, _payload(50.0))
+    assert base is not None and base["git_sha"] == "old" \
+        and base["backend"] == "cpu"
+
+
+def _history_entry(payload):
+    return {"benchmark": payload["benchmark"],
+            "backend": payload["meta"]["backend"],
+            "git_sha": payload["meta"]["git_sha"],
+            "timestamp": payload["meta"]["timestamp"],
+            "repeats": payload.get("repeats"),
+            "headline": payload["headline"]}
+
+
+def test_compare_flags_regression_and_tolerates_noise():
+    prev = _history_entry(_payload(100.0, sha="old", ts="t0"))
+    # repeats=4 -> default tol 0.25/sqrt(4) = 12.5%: -10% ok, -50% not
+    (row,) = compare_payload(_payload(92.0), [prev], 0.25)
+    assert row["status"] == "ok"
+    (row,) = compare_payload(_payload(50.0), [prev], 0.25)
+    assert row["status"] == "REGRESSION"
+    # lower-is-better flips the gate
+    prev_l = _history_entry(_payload(100.0, sha="old", ts="t0",
+                                     direction="lower"))
+    (row,) = compare_payload(_payload(150.0, direction="lower"),
+                             [prev_l], 0.25)
+    assert row["status"] == "REGRESSION"
+
+
+def test_compare_abs_tol_handles_near_zero_metrics():
+    # a -1% -> +4% overhead swing is a 5-point move on a near-zero base:
+    # relative gates explode, abs_tol absorbs it
+    prev = _history_entry(_payload(-1.0, sha="old", ts="t0",
+                                   direction="lower", abs_tol=10.0))
+    (row,) = compare_payload(_payload(4.0, direction="lower",
+                                      abs_tol=10.0), [prev], 0.25)
+    assert row["status"] == "ok"
+    (row,) = compare_payload(_payload(20.0, direction="lower",
+                                      abs_tol=10.0), [prev], 0.25)
+    assert row["status"] == "REGRESSION"
+
+
+def test_compare_no_baseline_and_new_metric_pass():
+    (row,) = compare_payload(_payload(50.0), [], 0.25)
+    assert row["status"] == "no-baseline"
+    prev = _history_entry(_payload(100.0, sha="old", ts="t0"))
+    prev["headline"] = {"other": {"value": 1.0, "direction": "higher"}}
+    (row,) = compare_payload(_payload(50.0), [prev], 0.25)
+    assert row["status"] == "new-metric"
+
+
+def test_compare_main_exit_codes(tmp_path):
+    out = tmp_path / "BENCH_toy.json"
+    hist = tmp_path / "BENCH_history.jsonl"
+
+    def meta(ts):
+        # explicit meta: distinct timestamps regardless of wall clock
+        # (write_bench's setdefault keeps a caller-provided block)
+        return {"git_sha": "abc", "timestamp": ts, "backend": "cpu",
+                "host": "h"}
+
+    write_bench(out, {"benchmark": "toy_bench", "repeats": 4,
+                      "meta": meta("t0")},
+                headline={"speed": ("higher", 100.0)}, history=hist)
+    # same payload re-measured in tolerance -> exit 0
+    write_bench(out, {"benchmark": "toy_bench", "repeats": 4,
+                      "meta": meta("t1")},
+                headline={"speed": ("higher", 97.0)}, history=hist)
+    assert compare_main(["--root", str(tmp_path)]) == 0
+    # seeded -50% regression -> exit 1
+    write_bench(out, {"benchmark": "toy_bench", "repeats": 4,
+                      "meta": meta("t2")},
+                headline={"speed": ("higher", 48.0)}, history=hist)
+    assert compare_main(["--root", str(tmp_path)]) == 1
+    # no payloads at all -> usage error
+    assert compare_main(["--root", str(tmp_path / "empty")]) == 2
+
+
+def test_repo_payloads_pass_compare():
+    """The committed BENCH payloads + history must gate clean (the CI
+    nightly runs exactly this)."""
+    assert load_history(REPO_ROOT / "BENCH_history.jsonl"), \
+        "BENCH_history.jsonl missing or empty"
+    assert compare_main(["--root", str(REPO_ROOT)]) == 0
+
+
+# -------------------------------------------------------- inspect bench
+
+def test_inspect_bench_cli(tmp_path):
+    out = tmp_path / "BENCH_toy.json"
+    hist = tmp_path / "BENCH_history.jsonl"
+    for v in (100.0, 104.0, 98.0):
+        write_bench(out, {"benchmark": "toy_bench", "repeats": 4},
+                    headline={"speed": ("higher", v)}, history=hist)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.telemetry.inspect", "bench",
+         str(hist)],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr
+    assert "toy_bench" in proc.stdout and "speed" in proc.stdout
+    assert "98" in proc.stdout          # latest value rendered
+    missing = subprocess.run(
+        [sys.executable, "-m", "repro.telemetry.inspect", "bench",
+         str(tmp_path / "nope.jsonl")],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert missing.returncode == 1

@@ -157,10 +157,114 @@ def test_console_sink_runs(capfd):
     assert "msd" in out and "round" in out
 
 
+def test_console_every_arg_decimates(capfd):
+    from repro.telemetry.sinks import ConsoleSink, sink_from_spec
+    sink = sink_from_spec("console:3")
+    assert isinstance(sink, ConsoleSink) and sink.every == 3
+
+    with session("console:3"):
+        for i in range(7):
+            emit("round", {"round": i, "msd": float(100 + i),
+                           "engine": "t"})
+    cap = capfd.readouterr()
+    out = cap.out + cap.err
+    # only rounds 2 and 5 (the 3rd and 6th records) render
+    assert "102" in out and "105" in out
+    assert "101" not in out and "104" not in out and "106" not in out
+
+
 def test_bad_sink_spec_rejected():
     with pytest.raises(ValueError):
         with session("carrier_pigeon"):
             pass
+
+
+# ------------------------------------------------- buffered flush / profile
+
+def test_metrics_stream_buffered_matches_per_round(tmp_path):
+    """flush_every=3 must deliver record-for-record what flush_every=1
+    does (including the drained partial buffer at the tail)."""
+    xs = jnp.arange(1, 8, dtype=jnp.int32)        # 7 rows: 2 full + 1 part
+
+    def collect(flush_every):
+        ms = MetricsStream("step", cumulative={"events_total": "events"},
+                           fields=("step", "events", "events_total"),
+                           flush_every=flush_every)
+        with session("memory") as sess:
+            def body(carry, x):
+                c, acc = carry
+                acc = ms.tap(acc, {"step": c, "events": x})
+                return (c + 1, acc), x
+
+            (_, acc), _ = jax.lax.scan(body, (jnp.int32(0), ms.init()), xs)
+            jax.effects_barrier()
+            ms.drain(acc)
+            recs = sess.memory_records("step")
+        return [{k: r[k] for k in ("step", "events", "events_total")}
+                for r in recs]
+
+    assert collect(1) == collect(3)
+
+
+def test_metrics_stream_buffered_requires_fields():
+    with pytest.raises(ValueError):
+        MetricsStream("step", flush_every=4)
+
+
+def test_flush_every_env(monkeypatch):
+    from repro.telemetry import flush_every_from_env
+    monkeypatch.delenv("REPRO_TELEMETRY_FLUSH_EVERY", raising=False)
+    assert flush_every_from_env() == 1
+    monkeypatch.setenv("REPRO_TELEMETRY_FLUSH_EVERY", "8")
+    assert flush_every_from_env() == 8
+    monkeypatch.setenv("REPRO_TELEMETRY_FLUSH_EVERY", "junk")
+    assert flush_every_from_env() == 1
+
+
+def test_profile_stream_attributes_compile(tmp_path):
+    with session("memory", profile=True) as sess:
+        @jax.jit
+        def f(x):
+            return x * 2 + 1
+
+        with trace_span("fresh_jit", tag="t"):
+            jax.block_until_ready(f(jnp.arange(101, dtype=jnp.float32)))
+    recs = sess.memory_records("profile")
+    assert len(recs) == 1
+    r = recs[0]
+    validate_record("profile", {k: v for k, v in r.items()
+                                if k not in ("stream", "run", "t_wall",
+                                             "phase_args")})
+    assert r["phase"] == "fresh_jit"
+    assert r["compiles"] >= 1 and r["retraces"] >= 1
+    assert r["compile_s"] > 0.0
+    assert r["wall_s"] >= r["compile_s"]
+    assert r["execute_s"] >= 0.0 and r["callback_s"] >= 0.0
+
+
+def test_profile_off_by_default():
+    with session("memory") as sess:
+        with trace_span("plain"):
+            pass
+    assert sess.memory_records("profile") == []
+
+
+def test_jaxprof_env_passthrough(monkeypatch):
+    from repro.telemetry.trace import SpanTracer
+    monkeypatch.delenv("REPRO_TELEMETRY_JAXPROF", raising=False)
+    assert SpanTracer().annotate is False
+    monkeypatch.setenv("REPRO_TELEMETRY_JAXPROF", "1")
+    tracer = SpanTracer()
+    assert tracer.annotate is True
+    # annotated spans still record events (TraceAnnotation wraps cleanly
+    # even outside a profiler capture)
+    with tracer.span("annotated", k=1):
+        pass
+    assert [e["name"] for e in tracer.events] == ["annotated"]
+    # explicit annotate beats the env var
+    assert SpanTracer(annotate=False).annotate is False
+    monkeypatch.setenv("REPRO_TELEMETRY_JAXPROF", "0")
+    assert SpanTracer().annotate is False
 
 
 # ------------------------------------------------------------------ sketch
