@@ -23,7 +23,9 @@ from __future__ import annotations
 
 import json
 import platform
-import subprocess
+# git-provenance capture only (rev-parse/diff-index); no delivery path,
+# nothing for the fleet transport layer to own
+import subprocess  # gflint: disable=GFL008
 import sys
 import time
 from pathlib import Path

@@ -5,13 +5,14 @@ from repro.analysis.rules.accounting import AccountantCoverageRule
 from repro.analysis.rules.bench import BenchWriteRoutingRule
 from repro.analysis.rules.callbacks import CallbackRoutingRule
 from repro.analysis.rules.keys import KeyHygieneRule
+from repro.analysis.rules.net import NetRoutingRule
 from repro.analysis.rules.parity import BackendParityRule
 from repro.analysis.rules.specs import SpecRoundTripRule
 from repro.analysis.rules.tracing import TraceSafetyRule
 
 ALL_RULES = (KeyHygieneRule, AccountantCoverageRule, TraceSafetyRule,
              BackendParityRule, SpecRoundTripRule, CallbackRoutingRule,
-             BenchWriteRoutingRule)
+             BenchWriteRoutingRule, NetRoutingRule)
 
 
 def default_rules():

@@ -2,11 +2,28 @@
 
 Arrays are host-gathered (fine at example scale; per-shard saving would slot
 in here for the production path) and stored flat keyed by pytree path.
+
+Crash atomicity: a checkpoint directory is never observable half-written.
+``save_checkpoint`` stages ``arrays.npz`` + ``manifest.json`` in a temp
+sibling directory and publishes it with ``os.replace`` — a reader (or a
+restarting fleet worker, repro.core.fleet.worker) sees either the previous
+complete checkpoint or the new complete one, never a torn mix.  A process
+killed mid-save leaves at most an orphaned ``.tmp-*`` sibling, which the
+next save of the same path removes.
+
+Load-side validation is exact-key: a manifest whose key set has extras OR
+is missing entries relative to the restore target is rejected with a clear
+error — silently dropping stored state is as wrong as silently zero-filling
+absent state.  ml_dtypes leaves (bfloat16, float8_*) round-trip bit-exactly:
+npz cannot serialize them, so saves store the raw bits as uint8/16/32 views
+with the true dtype recorded in the manifest, and loads view the stored
+bits back to the manifest-recorded ml_dtype before any cast.
 """
 from __future__ import annotations
 
 import json
 import os
+import shutil
 from typing import Any
 
 import jax
@@ -27,8 +44,15 @@ def _sanitize(key: str) -> str:
     return key.replace("/", "·")  # npz entries cannot contain path seps
 
 
+def _true_dtype(name: str) -> np.dtype:
+    """Manifest dtype string -> dtype, resolving ml_dtypes names
+    (bfloat16, float8_e4m3fn, ...) that plain numpy cannot parse."""
+    import ml_dtypes  # jax dependency; provides bfloat16 etc.
+    return np.dtype(getattr(ml_dtypes, name, name))
+
+
 def save_checkpoint(path: str, tree, step: int = 0) -> None:
-    os.makedirs(path, exist_ok=True)
+    """Atomically write ``tree`` as a checkpoint directory at ``path``."""
     flat = _flatten_with_paths(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     # numpy's npz cannot serialize ml_dtypes (bfloat16 etc.): store the raw
@@ -40,41 +64,85 @@ def save_checkpoint(path: str, tree, step: int = 0) -> None:
             storable[_sanitize(k)] = v.view(width)
         else:
             storable[_sanitize(k)] = v
-    np.savez(os.path.join(path, "arrays.npz"), **storable)
     manifest = {
         "step": step,
         "keys": sorted(arrays.keys()),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+
+    # stage in a temp sibling, fsync, then publish with os.replace: a kill
+    # mid-save can orphan the .tmp dir but never tear the published path
+    path = path.rstrip(os.sep)
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **storable)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        if not os.path.exists(path):
+            os.replace(tmp, path)        # fully atomic: rename into place
+        else:
+            # POSIX rename cannot replace a non-empty directory: retire the
+            # old checkpoint first (path -> .old, tmp -> path).  A kill in
+            # the sub-microsecond window between the two renames leaves NO
+            # live path but a COMPLETE .old sibling to recover from —
+            # never a torn checkpoint.
+            old = f"{path}.old-{os.getpid()}"
+            if os.path.isdir(old):
+                shutil.rmtree(old)
+            os.replace(path, old)
+            os.replace(tmp, path)
+            shutil.rmtree(old, ignore_errors=True)
+    finally:
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
 
 
 def load_checkpoint(path: str, like):
-    """Restore into the structure of `like` (shape/dtype validated)."""
+    """Restore into the structure of `like` (keys/shape/dtype validated)."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     flat_like = _flatten_with_paths(like)
-    missing = set(flat_like) - set(manifest["keys"])
+    stored = set(manifest["keys"])
+    missing = set(flat_like) - stored
     if missing:
-        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
-    import ml_dtypes  # jax dependency; provides bfloat16 etc.
+        raise ValueError(
+            f"checkpoint at {path} is missing keys required by the restore "
+            f"target: {sorted(missing)[:5]} "
+            f"({len(missing)} missing of {len(flat_like)})")
+    extra = stored - set(flat_like)
+    if extra:
+        raise ValueError(
+            f"checkpoint at {path} has keys the restore target does not: "
+            f"{sorted(extra)[:5]} ({len(extra)} extra of {len(stored)}); "
+            f"refusing to silently drop stored state — restore into a "
+            f"matching structure")
 
     restored = {}
     for k, leaf in flat_like.items():
         arr = data[_sanitize(k)]
-        true_dtype = np.dtype(getattr(
-            ml_dtypes, manifest["dtypes"][k], None) or manifest["dtypes"][k]) \
-            if manifest["dtypes"][k] not in (str(arr.dtype),) else arr.dtype
-        if str(arr.dtype) != str(true_dtype):
-            arr = arr.view(true_dtype)   # reinterpret stored raw bits
+        true_dtype = _true_dtype(manifest["dtypes"][k])
+        if arr.dtype != true_dtype:
+            arr = arr.view(true_dtype)   # uint-stored ml_dtype bits back
         if tuple(arr.shape) != tuple(jnp.shape(leaf)):
             raise ValueError(
                 f"shape mismatch for {k}: ckpt {arr.shape} vs {jnp.shape(leaf)}")
-        restored[k] = jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype")
-                                  else arr.dtype)
+        if isinstance(leaf, (np.ndarray, np.generic)):
+            # numpy restore target: stay on host at full precision (jax's
+            # default x64-off asarray would truncate float64 state — the
+            # fleet workers' crash-exactness depends on the bits)
+            restored[k] = np.asarray(arr, dtype=leaf.dtype)
+        else:
+            restored[k] = jnp.asarray(arr, dtype=leaf.dtype
+                                      if hasattr(leaf, "dtype") else arr.dtype)
     # rebuild tree in `like`'s structure
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     paths = [

@@ -1,0 +1,40 @@
+"""Multi-process server fleet: the event engine as a real deployment.
+
+Each of the P servers runs as its own worker (OS process, or tier-1-safe
+in-process thread) driving its local slice of the buffered event engine;
+psi exchanges and cohort dispatches travel over a pluggable
+:class:`~repro.core.fleet.transport.Transport` (``inproc`` | ``filelog``
+| ``socket``) selected by the ``fleet`` spec grammar.  A coordinator
+owns the namebook, dispatches cohorts with timeout + bounded retry +
+exponential backoff, SIGKILL-realizes ``outage ... kill=1`` faults, and
+elastically restarts killed workers from their crash-atomic write-ahead
+checkpoints.  See docs/fleet.md.
+"""
+from repro.core.fleet.chaos import ChaosOutcome, chaos_run, plan_kills
+from repro.core.fleet.coordinator import (Coordinator, Fleet,
+                                          FleetRunResult, fleet_cohort,
+                                          reference_solution, run_fleet)
+from repro.core.fleet.namebook import (COORDINATOR, Namebook, WorkerEntry,
+                                       worker_name)
+from repro.core.fleet.spec import TRANSPORTS, FleetSpec, parse_fleet_spec
+from repro.core.fleet.transport import (FileLogTransport, InprocHub,
+                                        InprocTransport, Message,
+                                        SocketTransport, Transport,
+                                        TransportError, make_transport,
+                                        send_with_retry)
+from repro.core.fleet.worker import (FleetProblem, FleetWorker,
+                                     load_worker_checkpoint,
+                                     worker_process_main)
+
+__all__ = [
+    "ChaosOutcome", "chaos_run", "plan_kills",
+    "Coordinator", "Fleet", "FleetRunResult", "fleet_cohort",
+    "reference_solution", "run_fleet",
+    "COORDINATOR", "Namebook", "WorkerEntry", "worker_name",
+    "TRANSPORTS", "FleetSpec", "parse_fleet_spec",
+    "FileLogTransport", "InprocHub", "InprocTransport", "Message",
+    "SocketTransport", "Transport", "TransportError", "make_transport",
+    "send_with_retry",
+    "FleetProblem", "FleetWorker", "load_worker_checkpoint",
+    "worker_process_main",
+]

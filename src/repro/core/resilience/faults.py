@@ -25,12 +25,15 @@ flat and hashable::
     none
     links:0.1
     outage:0.05
+    outage:0.05,kill=1
     straggler:0.2,stale=3
     dropout:0.25
     links:0.1+outage:0.02+straggler:0.1,stale=2+dropout:0.2
 
 Components are joined with ``+``; each is ``name:<prob>`` with optional
-``,key=value`` arguments (only ``straggler`` takes one: ``stale``).
+``,key=value`` arguments (``straggler`` takes ``stale``; ``outage`` takes
+``kill`` — ``kill=1`` asks the fleet runtime to realize the drawn outages
+as real worker-process SIGKILLs, see ``repro.core.fleet.chaos``).
 """
 from __future__ import annotations
 
@@ -86,6 +89,8 @@ class FaultModel:
     """Per-round failure probabilities (all independent across rounds)."""
     link_drop: float = 0.0       # i.i.d. per-edge drop probability
     outage: float = 0.0          # per-server correlated outage probability
+    outage_kill: bool = False    # realize outages as real worker SIGKILLs
+                                 # (core/fleet chaos) instead of A-row masks
     straggler: float = 0.0       # per-server straggler probability
     staleness: int = 1           # max consecutive rounds a straggler may
                                  # reuse the same stale psi
@@ -116,7 +121,8 @@ class FaultModel:
         if self.link_drop:
             parts.append(f"links:{self.link_drop:g}")
         if self.outage:
-            parts.append(f"outage:{self.outage:g}")
+            parts.append(f"outage:{self.outage:g}"
+                         + (",kill=1" if self.outage_kill else ""))
         if self.straggler:
             parts.append(f"straggler:{self.straggler:g},stale={self.staleness}")
         if self.client_dropout:
@@ -152,6 +158,11 @@ def parse_fault_spec(spec: str) -> FaultModel:
             k, sep, v = arg.partition("=")
             if name == "straggler" and k == "stale" and sep:
                 kw["staleness"] = int(v)
+            elif name == "outage" and k == "kill" and sep:
+                # kill realization: the fleet SIGKILLs the drawn servers'
+                # worker processes (repro.core.fleet.chaos.plan_kills)
+                # instead of masking their rows of A
+                kw["outage_kill"] = bool(int(v))
             else:
                 raise ValueError(
                     f"unknown argument {arg!r} for fault component {name!r}")

@@ -21,6 +21,7 @@ from __future__ import annotations
 from typing import Callable, Dict, NamedTuple, Sequence
 
 from repro.core.events.spec import (parse_async_spec, parse_latency_spec)
+from repro.core.fleet.spec import parse_fleet_spec
 from repro.core.population.cohort import (cohort_to_spec,
                                           parse_cohort_spec,
                                           parse_trace_spec)
@@ -66,6 +67,7 @@ def all_grammars() -> Dict[str, SpecGrammar]:
 register_grammar(
     "fault", parse_fault_spec, lambda m: m.to_spec(),
     examples=("none", "links:0.1", "links:0.1+dropout:0.2",
+              "outage:0.05,kill=1",
               "straggler:0.3,stale=2+dropout:0.1"))
 
 register_grammar(
@@ -100,10 +102,19 @@ register_grammar(
     examples=("none", "async:buffer=8,latency=lognorm:0.5,max_stale=4",
               "async:buffer=4,latency=fixed:2,alpha=0.5"))
 
+# multi-process fleet deployments (core/fleet): transport substrate,
+# retry/backoff budget, heartbeat cadence, checkpoint cadence
+register_grammar(
+    "fleet", parse_fleet_spec, lambda s: s.to_spec(),
+    examples=("fleet", "fleet:transport=filelog",
+              "fleet:transport=socket,retry=3,timeout=2.0,backoff=exp",
+              "fleet:retry=5,timeout=0.5,backoff=const,heartbeat=0.2,"
+              "ckpt_every=2"))
+
 # live-monitor alert rules (telemetry/watch.py): eps-budget exhaustion,
 # spectral-gap collapse, NaN trajectories, exploding norms, staleness,
 # throughput drop vs trailing window
 register_grammar(
     "watch", parse_watch_spec, watch_to_spec,
     examples=("nan", "eps:0.9,target=4", "gap:0.05+nan+norm:100",
-              "stale:4+throughput:0.5,window=20"))
+              "stale:4+throughput:0.5,window=20", "restart:2+nan"))

@@ -189,6 +189,24 @@ register_schema(Schema(
     )))
 
 register_schema(Schema(
+    "fleet", index="tick", description=(
+        "per-tick fleet coordinator record (core/fleet): worker "
+        "liveness, delivery retries, elastic restarts and transport "
+        "replay lag — the resilience counters of a multi-process run"),
+    fields=(
+        Field("tick", "int", "coordinator dispatch tick"),
+        Field("heartbeat_age", "series", "per-server seconds since the "
+                                         "last heartbeat"),
+        Field("retries", "int", "cumulative send/collect retries"),
+        Field("restarts", "int", "cumulative elastic worker restarts"),
+        Field("replay_lag", "int", "coordinator transport backlog "
+                                   "(records logged/queued but unread)"),
+        Field("down", "series", "per-server down indicator this tick"),
+        Field("flushes", "int", "servers that flushed this tick"),
+        Field("msd", "scalar", "centroid MSD vs w_ref"),
+    )))
+
+register_schema(Schema(
     "profile", index="seq", description=(
         "phase-level profiler record (telemetry/profile.py): wall time "
         "attributed to compile vs execute vs host callbacks per "

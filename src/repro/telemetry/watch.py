@@ -25,6 +25,10 @@ tested like fault/cohort/async):
 ``stale:BOUND``             staleness above the declared bound
 ``throughput:FRAC[,window=N]``  events-per-record drops below FRAC of
                             the trailing-window mean (default N=20)
+``restart:N``               fleet churn: cumulative elastic worker
+                            restarts (``fleet`` stream, core/fleet)
+                            exceed N — a fleet that keeps losing workers
+                            is failing even if every tick recovers
 
 Alerts go to the console (stderr) and optionally an alerts JSONL
 (``--alerts``); ``--once`` reads the whole file, prints a summary and
@@ -44,7 +48,8 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 
 # streams the nan rule scans (privacy exempt: eps=inf is meaningful)
 _NAN_STREAMS = ("round", "step", "mesh")
-_RULE_KINDS = ("eps", "gap", "nan", "norm", "stale", "throughput")
+_RULE_KINDS = ("eps", "gap", "nan", "norm", "stale", "throughput",
+               "restart")
 
 
 class WatchRule(NamedTuple):
@@ -60,7 +65,8 @@ class WatchRule(NamedTuple):
 
     def to_spec(self) -> str:
         primary = {"eps": "frac", "gap": "min", "norm": "max",
-                   "stale": "bound", "throughput": "frac"}.get(self.kind)
+                   "stale": "bound", "throughput": "frac",
+                   "restart": "max"}.get(self.kind)
         head = self.kind
         rest = []
         for k, v in self.params:
@@ -94,7 +100,8 @@ def parse_watch_spec(spec: str) -> Tuple[WatchRule, ...]:
             raise ValueError(f"unknown watch rule {kind!r}; expected one "
                              f"of {_RULE_KINDS}")
         primary = {"eps": "frac", "gap": "min", "norm": "max",
-                   "stale": "bound", "throughput": "frac"}.get(kind)
+                   "stale": "bound", "throughput": "frac",
+                   "restart": "max"}.get(kind)
         params: Dict[str, float] = {}
         if value:
             if primary is None:
@@ -198,6 +205,17 @@ class Watcher:
                     "value": worst}
         return None
 
+    def _check_restart(self, rule, rec) -> Optional[dict]:
+        if rec.get("stream") != "fleet":
+            return None
+        v = rec.get("restarts")
+        bound = rule.param("max")
+        if _num(v) and v > bound:
+            return {"message": f"fleet restarts {v:g} > {bound:g} "
+                               f"(worker churn)",
+                    "value": v}
+        return None
+
     def _check_throughput(self, rule, rec) -> Optional[dict]:
         v = _events_value(rec)
         if v is None:
@@ -225,12 +243,14 @@ class Watcher:
         checks = {"eps": self._check_eps, "gap": self._check_gap,
                   "nan": self._check_nan, "norm": self._check_norm,
                   "stale": self._check_stale,
-                  "throughput": self._check_throughput}
+                  "throughput": self._check_throughput,
+                  "restart": self._check_restart}
         for rule in self.rules:
             hit = checks[rule.kind](rule, rec)
             if hit is not None:
-                schema_index = {"round": "round"}.get(rec.get("stream"),
-                                                      "step")
+                schema_index = {"round": "round",
+                                "fleet": "tick"}.get(rec.get("stream"),
+                                                     "step")
                 fired.append({"rule": rule.to_spec(),
                               "stream": rec.get("stream"),
                               "index": rec.get(schema_index),

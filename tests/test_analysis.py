@@ -437,6 +437,36 @@ def test_gfl007_pragma_suppresses(tmp_path):
     """)
     assert "GFL007" not in rules_fired(findings), findings
 
+# --------------------------------------------------------------- GFL008
+def test_gfl008_fires_on_raw_net_imports(tmp_path):
+    findings = lint(tmp_path, """
+        import socket
+        import subprocess as sp
+        from subprocess import run
+
+        def shell(cmd):
+            return sp.run(cmd)
+    """)
+    hits = [f for f in findings if f.rule == "GFL008"]
+    # import socket + import subprocess + from subprocess import
+    assert len(hits) == 3, findings
+    assert all("core/fleet" in f.message for f in hits)
+
+def test_gfl008_fleet_package_exempt(tmp_path):
+    findings = lint(tmp_path, """
+        import socket
+        import subprocess
+    """, filename="src/repro/core/fleet/transport.py")
+    assert "GFL008" not in rules_fired(findings), findings
+
+def test_gfl008_quiet_on_unrelated_imports_and_pragma(tmp_path):
+    findings = lint(tmp_path, """
+        import os
+        import multiprocessing
+        import subprocess  # git provenance  # gflint: disable=GFL008
+    """)
+    assert "GFL008" not in rules_fired(findings), findings
+
 # ---------------------------------------------------------- baseline/CLI
 def test_baseline_roundtrip_and_diff(tmp_path):
     findings = lint(tmp_path, """

@@ -12,8 +12,8 @@ from repro.core.population.population import (PopulationSpec,
                                               population_to_spec)
 from repro.core.specs import SpecGrammar, all_grammars, get_grammar
 
-EXPECTED = {"async", "cohort", "fault", "latency", "population", "trace",
-            "watch"}
+EXPECTED = {"async", "cohort", "fault", "fleet", "latency", "population",
+            "trace", "watch"}
 
 
 def test_registry_inventory():
